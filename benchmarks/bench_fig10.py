@@ -1,0 +1,36 @@
+"""Paper Fig. 10: mixed batch — dim ∈ [32,256], nnz/row ∈ [1,5] in ONE batch
+(dense gemmBatched excluded, as in the paper: it cannot mix shapes; our padded
+dense path can, so we report it as a beyond-paper extra)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import random_batch
+from repro.core.spmm import batched_spmm
+
+
+def main(batch=100, n_bs=(64, 256, 1024)):
+    rng = np.random.default_rng(2)
+    coo, m_pad = random_batch(rng, batch=batch, dim=(32, 256),
+                              nnz_per_row=(1, 5))
+    total_nnz = float(jnp.sum(coo.nnz))
+    for n_b in n_bs:
+        b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
+        ts = {}
+        for impl in ("loop", "ref", "dense"):
+            fn = jax.jit(functools.partial(batched_spmm, impl=impl, k_pad=8))
+            t = time_fn(fn, coo, b)
+            ts[impl] = t
+            gflops = 2 * total_nnz * n_b / t / 1e9
+            row(f"fig10/mixed_nB{n_b}/{impl}", t * 1e6, f"{gflops:.2f}GFLOPS")
+        row(f"fig10/mixed_nB{n_b}/speedup_batched_vs_nonbatched", 0.0,
+            f"{ts['loop'] / ts['ref']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 9: parameter sweeps — batch size (50/100/200), matrix dim
+(32/64/128), nnz/row (1/5) — for the batched approaches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import random_batch
+from repro.core.spmm import batched_spmm
+
+
+def one(batch, dim, nnz, n_b=128):
+    rng = np.random.default_rng(1)
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+    b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
+    total_nnz = float(jnp.sum(coo.nnz))
+    for impl in ("ref", "dense", "loop"):
+        fn = jax.jit(functools.partial(batched_spmm, impl=impl,
+                                       k_pad=nnz + 2))
+        t = time_fn(fn, coo, b)
+        gflops = 2 * total_nnz * n_b / t / 1e9
+        row(f"fig9/b{batch}_dim{dim}_nnz{nnz}/{impl}", t * 1e6,
+            f"{gflops:.2f}GFLOPS")
+
+
+def main():
+    for batch in (50, 100, 200):            # Fig 9-(b)/(d): batch scaling
+        one(batch, 64, 2)
+    for dim in (32, 64, 128):               # Fig 9-(a)/(b)/(c): dim scaling
+        one(100, dim, 2)
+    for nnz in (1, 5):                      # Fig 9-(e)/(f): density scaling
+        one(100, 64, nnz)
+
+
+if __name__ == "__main__":
+    main()

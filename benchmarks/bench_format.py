@@ -1,0 +1,34 @@
+"""Format-conversion overhead (paper §IV honesty check): COO→ELL / COO→dense
+conversion cost relative to one SpMM — the paper's argument for staying with
+simple formats is that exotic-format conversion costs ≳ several SpMMs."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import coo_to_dense, coo_to_ell, random_batch
+from repro.core.spmm import batched_spmm
+
+
+def main(batch=100, dim=50, nnz=2, n_b=128):
+    rng = np.random.default_rng(4)
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+    b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
+
+    t_spmm = time_fn(jax.jit(functools.partial(batched_spmm, impl="ref")),
+                     coo, b)
+    t_ell = time_fn(jax.jit(functools.partial(coo_to_ell, m_pad=m_pad,
+                                              k_pad=nnz + 3)), coo)
+    t_dense = time_fn(jax.jit(functools.partial(coo_to_dense, m_pad=m_pad)),
+                      coo)
+    row("format/spmm_ref", t_spmm * 1e6, "1.00xSpMM")
+    row("format/coo_to_ell", t_ell * 1e6, f"{t_ell / t_spmm:.2f}xSpMM")
+    row("format/coo_to_dense", t_dense * 1e6, f"{t_dense / t_spmm:.2f}xSpMM")
+
+
+if __name__ == "__main__":
+    main()

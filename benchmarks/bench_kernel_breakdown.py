@@ -1,0 +1,63 @@
+"""Paper Table IV / Fig. 11: per-op execution time inside one graph-conv
+layer for one mini-batch — MatMul, Add, SpMM — non-batched (one op per
+sample × channel) vs batched (one op per channel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import random_batch
+from repro.core.spmm import batched_spmm
+from repro.kernels.ref import spmm_coo_single
+
+
+def main(batch=50, dim=50, n_in=64, n_out=64):
+    rng = np.random.default_rng(3)
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=2)
+    x = jnp.asarray(rng.normal(size=(batch, m_pad, n_in)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n_in, n_out)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(n_out,)), jnp.float32)
+
+    # --- non-batched: one op per sample (scan reproduces sequential launches)
+    def mm_loop(x, w):
+        return jax.lax.scan(lambda _, xb: (None, xb @ w), None, x)[1]
+
+    def add_loop(u, bias):
+        return jax.lax.scan(lambda _, ub: (None, ub + bias), None, u)[1]
+
+    def spmm_loop(rid, cid, val, u):
+        return jax.lax.scan(
+            lambda _, a: (None, spmm_coo_single(*a, m_pad)), None,
+            (rid, cid, val, u))[1]
+
+    # --- batched: one op for the whole mini-batch (Fig. 7)
+    def mm_batched(x, w):
+        return jnp.einsum("bmn,nf->bmf", x, w)
+
+    def add_batched(u, bias):
+        return u + bias
+
+    def spmm_batched(coo, u):
+        return batched_spmm(coo, u, impl="ref")
+
+    u = mm_batched(x, w)
+    t = {}
+    t["MatMul", "nonbatched"] = time_fn(jax.jit(mm_loop), x, w)
+    t["MatMul", "batched"] = time_fn(jax.jit(mm_batched), x, w)
+    t["Add", "nonbatched"] = time_fn(jax.jit(add_loop), u, bias)
+    t["Add", "batched"] = time_fn(jax.jit(add_batched), u, bias)
+    t["SpMM", "nonbatched"] = time_fn(
+        jax.jit(spmm_loop), coo.row_ids, coo.col_ids, coo.values, u)
+    t["SpMM", "batched"] = time_fn(jax.jit(spmm_batched), coo, u)
+
+    for op in ("MatMul", "Add", "SpMM"):
+        for kind in ("nonbatched", "batched"):
+            row(f"table4/{op}/{kind}", t[op, kind] * 1e6, "")
+        row(f"table4/{op}/speedup", 0.0,
+            f"{t[op, 'nonbatched'] / t[op, 'batched']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

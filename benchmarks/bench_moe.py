@@ -1,0 +1,55 @@
+"""MoE dispatch strategies (reduced mixtral, CPU wall-clock) + the grouped
+ragged-matmul kernel vs its oracle — the §Perf Pair-1 iterations as a
+runnable benchmark."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro import configs, tuning
+from repro.models.layers import init_moe, moe_apply
+
+
+def dispatch_modes(b=8, t=128):
+    cfg = dataclasses.replace(configs.get("mixtral-8x22b").reduced(),
+                              dtype="float32")
+    p = init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (b, t, cfg.d_model))
+    for mode in ("scatter", "grouped"):
+        def f(p, x, mode=mode):
+            with tuning.use_flags(moe_dispatch=mode):
+                return moe_apply(p, cfg, x)[0]
+
+        tt = time_fn(jax.jit(f), p, x)
+        row(f"moe/dispatch_{mode}", tt * 1e6, "")
+
+
+def grouped_kernel(m=512, k=64, n=128, e=8):
+    from repro.kernels.grouped_matmul import grouped_matmul
+    from repro.kernels.ref import grouped_matmul_ref
+
+    rng = np.random.default_rng(0)
+    sizes = np.full((e,), m // e, np.int32)
+    eids = jnp.asarray(np.repeat(np.arange(e), sizes), jnp.int32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    t_ref = time_fn(jax.jit(lambda x, w: grouped_matmul_ref(x, eids, w)),
+                    x, w)
+    row("moe/grouped_ref_einsum", t_ref * 1e6, "")
+    t_k = time_fn(lambda x, w: grouped_matmul(
+        x, w, jnp.asarray(sizes), max_groups_per_tile=2), x, w)
+    row("moe/grouped_pallas_interpret", t_k * 1e6,
+        "interpret-mode (correctness path)")
+
+
+def main():
+    dispatch_modes()
+    grouped_kernel()
+
+
+if __name__ == "__main__":
+    main()

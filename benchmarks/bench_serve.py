@@ -1,0 +1,44 @@
+"""Decode throughput (reduced configs, CPU): one compiled decode step serving
+a full slot batch — the serving-side analogue of the paper's batched-vs-
+per-launch comparison (batch 8 vs batch 1 per step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro import configs
+from repro.launch import specs
+from repro.models import lm
+
+
+def one(arch: str, batch: int = 8, cache_len: int = 64):
+    cfg = configs.get(arch).reduced()
+    params = lm.init_params(jax.random.key(0), cfg)
+    tokens, caches, pos = specs.make_decode_inputs(cfg, batch, cache_len,
+                                                   concrete=True)
+    step = jax.jit(lambda p, t, c, q: lm.decode_step(p, cfg, t, c, q))
+
+    def run(p, t, c, q):
+        logits, c2 = step(p, t, c, q)
+        return logits
+
+    t = time_fn(run, params, tokens, caches, pos, warmup=2, iters=8)
+    row(f"serve/{arch}/batch{batch}", t * 1e6,
+        f"{batch / t:.0f}tok_per_s")
+    # batch-1 steps for the same token count (per-request dispatch analogue)
+    tokens1, caches1, pos1 = specs.make_decode_inputs(cfg, 1, cache_len,
+                                                      concrete=True)
+    t1 = time_fn(run, params, tokens1, caches1, pos1, warmup=2, iters=8)
+    row(f"serve/{arch}/batch1x{batch}", batch * t1 * 1e6,
+        f"{1 / t1:.0f}tok_per_s")
+    row(f"serve/{arch}/batched_speedup", 0.0, f"{batch * t1 / t:.2f}x")
+
+
+def main():
+    for arch in ("llama3-8b", "mixtral-8x22b", "rwkv6-1.6b", "zamba2-7b"):
+        one(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark utilities.
+
+CPU-timing caveat (applies to every harness here): this container runs XLA's
+CPU backend, so absolute numbers are NOT TPU numbers. What transfers is the
+*structural* comparison the paper makes — batched-one-op vs sequential
+per-sample ops — because the dispatch/launch overhead being amortized exists
+on both runtimes. Pallas kernels run in interpret mode (Python), so they are
+validated for correctness here and their TPU performance is modeled in the
+roofline (EXPERIMENTS.md §Roofline), not wall-clocked.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in seconds (blocks on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,65 @@
+"""Render the §Roofline table from the dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str, include_variants: bool = False) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ROOT, mesh, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        if not include_variants and name.count("__") != 1:
+            continue   # §Perf variant records carry a __<suffix>
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt(rec: dict, md: bool) -> str:
+    if rec["status"] == "skipped":
+        cells = [rec["arch"], rec["cell"], "N/A", "", "", "", "skipped", "", ""]
+    elif rec["status"] == "error":
+        cells = [rec["arch"], rec["cell"], "ERROR",
+                 rec.get("error", "")[:60], "", "", "", "", ""]
+    else:
+        cells = [
+            rec["arch"], rec["cell"],
+            f"{rec['t_compute']:.3f}",
+            f"{rec['t_memory']:.3f}",
+            f"{rec['t_collective']:.3f}",
+            rec["bottleneck"],
+            f"{rec['model_flops']:.2e}",
+            f"{rec['useful_flops_ratio']:.3f}",
+            f"{rec['peak_fraction']:.4f}",
+        ]
+    sep = " | " if md else ","
+    line = sep.join(str(c) for c in cells)
+    return f"| {line} |" if md else line
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    cols = ["arch", "cell", "t_compute(s)", "t_memory(s)", "t_collective(s)",
+            "bottleneck", "MODEL_FLOPS", "useful_ratio", "peak_frac"]
+    if args.md:
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+    else:
+        print(",".join(cols))
+    for rec in load(args.mesh):
+        print(fmt(rec, args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py for
+the CPU-timing caveat). ``--full`` uses paper-scale dataset sizes; the
+default keeps the whole suite under a few minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_chemgcn,
+        bench_fig8,
+        bench_fig9,
+        bench_fig10,
+        bench_format,
+        bench_kernel_breakdown,
+        bench_moe,
+        bench_serve,
+    )
+
+    header()
+    suites = [
+        ("fig8", lambda: bench_fig8.main()),
+        ("fig9", lambda: bench_fig9.main()),
+        ("fig10", lambda: bench_fig10.main()),
+        ("table4", lambda: bench_kernel_breakdown.main()),
+        ("format", lambda: bench_format.main()),
+        ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
+        ("moe", lambda: bench_moe.main()),
+        ("serve", lambda: bench_serve.main()),
+    ]
+    failed = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

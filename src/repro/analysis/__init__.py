@@ -1,0 +1,1 @@
+from repro.analysis.roofline import HW, RooflineReport, analyze  # noqa: F401

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: batched SpMM for GCNs."""
+from repro.core.formats import (  # noqa: F401
+    BatchedCOO,
+    BatchedCSR,
+    BatchedELL,
+    coo_from_lists,
+    coo_to_csr,
+    coo_to_dense,
+    coo_to_ell,
+    random_batch,
+)
+from repro.core.batching import (  # noqa: F401
+    BatchPlan,
+    plan_batched_gemm,
+    plan_batched_spmm,
+)
+from repro.core.spmm import IMPLS, batched_spmm, dense_batched_matmul  # noqa: F401

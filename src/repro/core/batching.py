@@ -1,0 +1,108 @@
+"""Batching planner — the paper's §IV-B/§IV-C resource-assignment logic,
+re-derived for the TPU memory hierarchy.
+
+Paper (P100/CUDA)                         | Here (TPU v5e/Pallas)
+------------------------------------------+----------------------------------
+shared memory per block: 32-64 KB         | VMEM per core: ~16 MiB usable
+case 1: m_A*n_B*4 <= smem -> whole output | case 1: working set <= VMEM_TILE_BUDGET
+        resident in shared memory         |         -> one grid step per matrix
+case 2: column cache-blocking into p subs | case 2: split n_B into p column
+        (Fig. 5-(b)/(d))                  |         panels (multiples of 128 lanes)
+case 3: m_A > 8192 -> don't batch, use a  | case 3: m_pad > LARGE_M -> fall back
+        large-matrix kernel               |         to the non-batched path
+one thread block per (matrix x panel)     | one grid step per (matrix x panel)
+subWarp = next_pow2(n_B) capped at 32     | the 128-wide lane axis covers n_B
+                                          | columns; sublanes cover rows/slots
+
+The planner is *static*: it sees only shapes (batch, m_pad, k_pad/nnz_pad,
+n_B, dtype bytes) and emits a BatchPlan that the kernels, the reference path
+and the benchmarks all share — so "batched vs non-batched" comparisons use
+identical blocking decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# TPU constants: ~16 MiB VMEM per TensorCore (v5e), with a conservative
+# per-step budget because Pallas double-buffers every block for pipelining.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_TILE_BUDGET = 4 * 1024 * 1024  # per-grid-step working set target
+LANES = 128                         # vector lane width (last dim tiling)
+SUBLANES = 8                        # second-to-last dim tiling (f32)
+LARGE_M = 8192                      # paper's case-3 threshold, kept verbatim
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Static blocking decision for one batched SpMM/GEMM call."""
+
+    batch: int
+    m_pad: int          # padded rows per matrix (multiple of SUBLANES)
+    n_b: int            # dense operand columns
+    n_block: int        # column panel width (multiple of LANES, or n_b if small)
+    p: int              # number of column panels = ceil(n_b / n_block)
+    case: int           # 1, 2 or 3 (paper Fig. 5)
+    bytes_per_step: int # VMEM working-set estimate per grid step
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.batch, self.p)
+
+
+def plan_batched_spmm(
+    *,
+    batch: int,
+    m_pad: int,
+    n_b: int,
+    slots: int,
+    itemsize: int = 4,
+) -> BatchPlan:
+    """Size the column panels the way the paper sizes cache blocks.
+
+    ``slots`` is k_pad (ELL) or nnz_pad (COO) — it contributes the index/value
+    working set. The per-step working set is:
+
+        out panel   m_pad * n_block * itemsize
+        B panel     m_pad * n_block * itemsize   (same rows, same panel)
+        indices     ~ 2 * slots_bytes
+    """
+    m_pad = _round_up(max(m_pad, 1), SUBLANES)
+    if m_pad > LARGE_M:
+        # Paper case 3: too large to benefit from batching; callers take the
+        # per-sample large-matrix path.
+        return BatchPlan(batch, m_pad, n_b, n_b, 1, 3, 0)
+
+    idx_bytes = 2 * slots * 8  # int32 ids + values, per matrix
+    n_block = _round_up(n_b, LANES) if n_b >= LANES else n_b
+    while n_block > LANES:
+        step = 2 * m_pad * n_block * itemsize + idx_bytes
+        if step <= VMEM_TILE_BUDGET:
+            break
+        # halve along 128-lane multiples, mirroring the paper's "divide the
+        # output along the column" (Fig. 5-(b)/(d))
+        n_block = _round_up(n_block // 2, LANES)
+    step = 2 * m_pad * n_block * itemsize + idx_bytes
+    p = -(-n_b // n_block)
+    case = 1 if p == 1 else 2
+    return BatchPlan(batch, m_pad, n_b, n_block, p, case, step)
+
+
+def plan_batched_gemm(
+    *, batch: int, m: int, n: int, k: int, itemsize: int = 4
+) -> BatchPlan:
+    """Panel plan for the densified (gemmBatched-analogue) path."""
+    m_pad = _round_up(max(m, 1), SUBLANES)
+    k_pad = _round_up(max(k, 1), SUBLANES)
+    n_block = _round_up(n, LANES) if n >= LANES else n
+    while n_block > LANES:
+        step = (m_pad * n_block + k_pad * n_block + m_pad * k_pad) * itemsize
+        if step <= VMEM_TILE_BUDGET:
+            break
+        n_block = _round_up(n_block // 2, LANES)
+    step = (m_pad * n_block + k_pad * n_block + m_pad * k_pad) * itemsize
+    p = -(-n // n_block)
+    return BatchPlan(batch, m_pad, n, n_block, p, 1 if p == 1 else 2, step)

@@ -1,0 +1,270 @@
+"""Batched sparse-matrix containers (paper §II-B, adapted for TPU).
+
+The paper works with three storages: CSR, COO and TensorFlow's SparseTensor
+(COO with an (nnz, 2) index array). For a *batch* of small graphs we pad every
+matrix in the batch to the batch maxima (``m_pad`` rows, ``nnz_pad`` non-zeros,
+``k_pad`` nnz/row for ELL) so the whole batch is a dense, stackable pytree —
+this is the TPU analogue of the paper's "launch max(m_A)*subWarp*batch threads
+and let the redundant ones terminate immediately" policy (§IV-C): padded slots
+carry value 0.0 and index 0, so they contribute nothing.
+
+All containers are registered pytrees; they flow through jit/vmap/pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchedCOO:
+    """SparseTensor/COO analogue: flat non-zero triples, padded to nnz_pad.
+
+    row_ids, col_ids : (batch, nnz_pad) int32  — padding points at row/col 0
+    values           : (batch, nnz_pad) float  — padding is 0.0
+    nnz              : (batch,) int32          — true nnz per matrix
+    n_rows           : (batch,) int32          — true m_A per matrix
+    """
+
+    row_ids: jax.Array
+    col_ids: jax.Array
+    values: jax.Array
+    nnz: jax.Array
+    n_rows: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.values.shape[1]
+
+    def with_values(self, values: jax.Array) -> "BatchedCOO":
+        return dataclasses.replace(self, values=values)
+
+    def transpose(self, m_pad: int) -> "BatchedCOO":
+        """Aᵀ for the backward pass (paper §IV-D: batched SpMM is also used in
+        backprop). For COO a transpose is just swapping the index arrays."""
+        del m_pad
+        return dataclasses.replace(self, row_ids=self.col_ids, col_ids=self.row_ids)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchedCSR:
+    """CSR analogue (paper Fig. 1/4): row pointers over padded rows.
+
+    rpt     : (batch, m_pad + 1) int32
+    col_ids : (batch, nnz_pad) int32
+    values  : (batch, nnz_pad) float
+    n_rows  : (batch,) int32
+    """
+
+    rpt: jax.Array
+    col_ids: jax.Array
+    values: jax.Array
+    n_rows: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.rpt.shape[1] - 1
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.values.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchedELL:
+    """Row-padded ELL: the TPU-native layout for the atomic-free row-split
+    kernel (the SWA-CSR analogue — see DESIGN.md §2).
+
+    col_ids : (batch, m_pad, k_pad) int32  — padding points at column 0
+    values  : (batch, m_pad, k_pad) float  — padding is 0.0
+    n_rows  : (batch,) int32
+    """
+
+    col_ids: jax.Array
+    values: jax.Array
+    n_rows: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def k_pad(self) -> int:
+        return self.values.shape[2]
+
+
+# ---------------------------------------------------------------------------
+# Host-side constructors (numpy in, device pytree out)
+# ---------------------------------------------------------------------------
+
+def coo_from_lists(
+    triples: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray]],
+    n_rows: Sequence[int],
+    *,
+    m_pad: int | None = None,
+    nnz_pad: int | None = None,
+    dtype=jnp.float32,
+) -> BatchedCOO:
+    """Build a BatchedCOO from per-sample (rows, cols, vals) numpy triples."""
+    batch = len(triples)
+    max_nnz = max((len(t[0]) for t in triples), default=1)
+    nnz_pad = nnz_pad or max(1, _round_up(max_nnz, 8))
+    rid = np.zeros((batch, nnz_pad), np.int32)
+    cid = np.zeros((batch, nnz_pad), np.int32)
+    val = np.zeros((batch, nnz_pad), np.float32)
+    nnz = np.zeros((batch,), np.int32)
+    for b, (r, c, v) in enumerate(triples):
+        k = len(r)
+        rid[b, :k], cid[b, :k], val[b, :k] = r, c, v
+        nnz[b] = k
+    del m_pad
+    return BatchedCOO(
+        row_ids=jnp.asarray(rid),
+        col_ids=jnp.asarray(cid),
+        values=jnp.asarray(val, dtype),
+        nnz=jnp.asarray(nnz),
+        n_rows=jnp.asarray(np.asarray(n_rows, np.int32)),
+    )
+
+
+def coo_to_csr(coo: BatchedCOO, m_pad: int) -> BatchedCSR:
+    """Device-side stable conversion COO → CSR (sorts by row id)."""
+
+    def one(rid, cid, val, nnz):
+        nnz_pad = rid.shape[0]
+        # Send padding to row m_pad so it sorts to the tail; padded values are
+        # already 0.0 so the tail is harmless.
+        slot = jnp.arange(nnz_pad)
+        valid = slot < nnz
+        rid_eff = jnp.where(valid, rid, m_pad)
+        order = jnp.argsort(rid_eff, stable=True)
+        rid_s, cid_s, val_s = rid_eff[order], cid[order], val[order]
+        counts = (
+            jnp.zeros((m_pad + 1,), jnp.int32)
+            .at[jnp.minimum(rid_s, m_pad)]
+            .add(valid[order].astype(jnp.int32))
+        )
+        rpt = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts[:m_pad])]
+        )
+        return rpt, cid_s, val_s
+
+    rpt, cid, val = jax.vmap(one)(coo.row_ids, coo.col_ids, coo.values, coo.nnz)
+    return BatchedCSR(rpt=rpt, col_ids=cid, values=val, n_rows=coo.n_rows)
+
+
+def coo_to_ell(coo: BatchedCOO, m_pad: int, k_pad: int) -> BatchedELL:
+    """Device-side COO → ELL. Slot index within a row is computed with a
+    stable sort + per-row running count; rows with > k_pad nnz are invalid
+    (callers size k_pad from the planner's batch maximum)."""
+
+    def one(rid, cid, val, nnz):
+        nnz_pad = rid.shape[0]
+        slot = jnp.arange(nnz_pad)
+        valid = slot < nnz
+        rid_eff = jnp.where(valid, rid, m_pad)
+        order = jnp.argsort(rid_eff, stable=True)
+        rid_s, cid_s, val_s, valid_s = (
+            rid_eff[order],
+            cid[order],
+            val[order],
+            valid[order],
+        )
+        # position within row = index - first index of this row
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), rid_s[1:] != rid_s[:-1]]
+        )
+        seg_start = jnp.where(is_start, slot, 0)
+        seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+        k_in_row = slot - seg_start
+        ok = valid_s & (rid_s < m_pad) & (k_in_row < k_pad)
+        flat = jnp.where(ok, rid_s * k_pad + k_in_row, m_pad * k_pad)
+        col_out = (
+            jnp.zeros((m_pad * k_pad + 1,), jnp.int32)
+            .at[flat]
+            .set(jnp.where(ok, cid_s, 0))[:-1]
+            .reshape(m_pad, k_pad)
+        )
+        val_out = (
+            jnp.zeros((m_pad * k_pad + 1,), val.dtype)
+            .at[flat]
+            .set(jnp.where(ok, val_s, 0))[:-1]
+            .reshape(m_pad, k_pad)
+        )
+        return col_out, val_out
+
+    cid, val = jax.vmap(one)(coo.row_ids, coo.col_ids, coo.values, coo.nnz)
+    return BatchedELL(col_ids=cid, values=val, n_rows=coo.n_rows)
+
+
+def coo_to_dense(coo: BatchedCOO, m_pad: int, n_cols: int | None = None) -> jax.Array:
+    """Densify the batch of adjacency matrices (the cuBLAS-gemmBatched-baseline
+    path, paper §V-A)."""
+    n_cols = n_cols or m_pad
+
+    def one(rid, cid, val, nnz):
+        valid = jnp.arange(rid.shape[0]) < nnz
+        v = jnp.where(valid, val, 0)
+        return jnp.zeros((m_pad, n_cols), val.dtype).at[rid, cid].add(v)
+
+    return jax.vmap(one)(coo.row_ids, coo.col_ids, coo.values, coo.nnz)
+
+
+def random_batch(
+    rng: np.random.Generator,
+    *,
+    batch: int,
+    dim: int | tuple[int, int],
+    nnz_per_row: int | tuple[int, int],
+    self_loops: bool = True,
+    dtype=jnp.float32,
+) -> tuple[BatchedCOO, int]:
+    """Randomly generated square sparse matrices following the paper's §V-A
+    generator (dim and nnz/row parameterized; mixed batches supported via
+    (lo, hi) ranges as in Fig. 10). Returns (BatchedCOO, m_pad)."""
+    dims = (dim, dim) if isinstance(dim, int) else dim
+    ks = (nnz_per_row,) * 2 if isinstance(nnz_per_row, int) else nnz_per_row
+    triples, n_rows = [], []
+    for _ in range(batch):
+        m = int(rng.integers(dims[0], dims[1] + 1))
+        k = int(rng.integers(ks[0], ks[1] + 1))
+        rows, cols = [], []
+        for r in range(m):
+            cs = rng.choice(m, size=min(k, m), replace=False)
+            rows.extend([r] * len(cs))
+            cols.extend(cs.tolist())
+        if self_loops:
+            # a_uu = 1 (paper §II-A)
+            for r in range(m):
+                rows.append(r)
+                cols.append(r)
+        rows = np.asarray(rows, np.int32)
+        cols = np.asarray(cols, np.int32)
+        vals = np.ones(len(rows), np.float32)
+        triples.append((rows, cols, vals))
+        n_rows.append(m)
+    m_pad = _round_up(max(n_rows), 8)
+    return coo_from_lists(triples, n_rows, dtype=dtype), m_pad

@@ -1,0 +1,78 @@
+"""Graph convolution layer — paper Fig. 6 (non-batched) and Fig. 7 (batched).
+
+Semantics (paper §II-A, eq. (2)): Y = Σ_ch A_ch · (X · W_ch + bias_ch), summed
+over edge channels (bond types in ChemGCN). The two execution strategies are
+numerically identical; the batched one restructures the computation so MatMul,
+Add and SpMM each run as ONE device op per channel instead of one per
+(sample × channel) — the paper's O(channel·batchsize) → O(channel) kernel
+launch reduction.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BatchedCOO
+from repro.core.spmm import batched_spmm
+from repro.kernels.ref import spmm_coo_single
+
+
+def init_graph_conv(key, n_in: int, n_out: int, channels: int):
+    k1, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(n_in)
+    return {
+        "w": jax.random.uniform(k1, (channels, n_in, n_out), jnp.float32,
+                                -scale, scale),
+        "b": jnp.zeros((channels, n_out), jnp.float32),
+    }
+
+
+def graph_conv_batched(
+    params,
+    adj: Sequence[BatchedCOO],   # one BatchedCOO per channel, batch-leading
+    x: jax.Array,                # (batch, m_pad, n_in)
+    *,
+    impl: str = "ref",
+    k_pad: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paper Fig. 7: per channel, one MatMul over the whole mini-batch
+    (the reshape to (m_X·batchsize, n_X) is implicit in the batched einsum),
+    one Add, one Batched SpMM; then the element-wise channel sum."""
+    y = None
+    for ch, a_ch in enumerate(adj):
+        u = jnp.einsum("bmn,nf->bmf", x, params["w"][ch])      # MATMUL (one op)
+        u = u + params["b"][ch]                                 # ADD (one op)
+        c = batched_spmm(a_ch, u, impl=impl, k_pad=k_pad,
+                         interpret=interpret)                   # BATCHEDSPMM
+        y = c if y is None else y + c                           # ELEMENTWISEADD
+    return y
+
+
+def graph_conv_nonbatched(
+    params,
+    adj: Sequence[BatchedCOO],
+    x: jax.Array,
+) -> jax.Array:
+    """Paper Fig. 6: the per-(sample × channel) loop, kept sequential with a
+    scan over the batch so it reproduces the launch-per-sample structure that
+    the paper measures as the baseline."""
+    channels = len(adj)
+    rids = jnp.stack([a.row_ids for a in adj], 1)   # (batch, ch, nnz_pad)
+    cids = jnp.stack([a.col_ids for a in adj], 1)
+    vals = jnp.stack([a.values for a in adj], 1)
+
+    def per_sample(_, args):
+        rid, cid, val, xb = args                     # one mini-batch sample
+        m_pad = xb.shape[0]
+        y = jnp.zeros((m_pad, params["w"].shape[-1]), xb.dtype)
+        for ch in range(channels):
+            u = xb @ params["w"][ch]                 # MATMUL (per sample)
+            u = u + params["b"][ch]                  # ADD (per sample)
+            y = y + spmm_coo_single(rid[ch], cid[ch], val[ch], u, m_pad)
+        return None, y
+
+    _, y = jax.lax.scan(per_sample, None, (rids, cids, vals, x))
+    return y

@@ -1,0 +1,5 @@
+"""User-facing batched SpMM API (re-export; the implementation lives in
+``repro.kernels.ops`` next to the kernels it dispatches to)."""
+from repro.kernels.ops import IMPLS, batched_spmm, dense_batched_matmul
+
+__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul"]

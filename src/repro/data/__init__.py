@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic molecular graphs (ChemGCN) and token streams (LMs)."""

@@ -1,0 +1,75 @@
+"""Token data pipeline for the LM trainers.
+
+Design goals that matter at fleet scale:
+- **deterministic by (seed, step, shard)**: batch `i` is a pure function of
+  the stream spec, so restart-after-preemption resumes the exact sequence
+  with no data-loader state in the checkpoint, and every data-parallel shard
+  draws a disjoint slice (`shard`, `num_shards`);
+- **pull-based with prefetch**: a bounded background thread keeps `depth`
+  batches ready so a slow step never stalls the input side (straggler
+  posture: input is never the synchronization point);
+- **synthetic but learnable**: a fixed random bigram table + noise gives a
+  real loss floor (≪ ln(vocab)), so convergence tests and the 100M example
+  measure actual learning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamSpec:
+    vocab: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    branch: int = 4          # bigram successors per token
+    noise: float = 0.1
+    shard: int = 0
+    num_shards: int = 1
+
+
+def make_batch(spec: TokenStreamSpec, step: int) -> np.ndarray:
+    """Batch for `step` — pure function of (spec, step)."""
+    table_rng = np.random.default_rng(spec.seed)
+    table = table_rng.integers(0, spec.vocab,
+                               size=(spec.vocab, spec.branch))
+    rng = np.random.default_rng(
+        (spec.seed, step, spec.shard, 0xA5A5))
+    toks = np.empty((spec.batch, spec.seq_len), np.int32)
+    toks[:, 0] = rng.integers(0, spec.vocab, spec.batch)
+    for t in range(1, spec.seq_len):
+        nxt = table[toks[:, t - 1], rng.integers(0, spec.branch, spec.batch)]
+        mix = rng.random(spec.batch) < spec.noise
+        nxt[mix] = rng.integers(0, spec.vocab, int(mix.sum()))
+        toks[:, t] = nxt
+    return toks
+
+
+def token_stream(spec: TokenStreamSpec, start_step: int = 0,
+                 prefetch: int = 2) -> Iterator[dict]:
+    """Prefetching iterator of {"tokens": (batch, seq)} starting at
+    `start_step` (exact resume)."""
+    q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            arr = make_batch(spec, step)
+            q.put(arr)
+            step += 1
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    try:
+        while True:
+            yield {"tokens": jnp.asarray(q.get())}
+    finally:
+        stop.set()

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, pjit step builders, compression, collectives."""

@@ -1,0 +1,39 @@
+"""Gradient compression: int8 error-feedback (EF-SGD style).
+
+Each gradient leaf is quantized to int8 with a per-leaf scale before the
+cross-replica reduction; the quantization residual is carried in the
+optimizer state and added back the next step, which keeps convergence
+(Karimireddy et al., 2019). Under GSPMD the reduction itself is emitted by
+XLA; the wire format a multi-pod runtime would ship per hop is the int8
+payload + one f32 scale per leaf (8 B), a ~4× cross-pod bandwidth saving —
+EXPERIMENTS.md reports the collective-bytes delta from the lowered HLO.
+
+Off by default; enabled with ``--compress-grads`` and covered by a
+convergence test (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(g, err):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_int8_compress_decompress(grads, ef_err):
+    """Returns (decompressed grads, new EF residuals)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_err)
+    out = [_quant(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return deq, new_err

@@ -1,0 +1,190 @@
+"""Mesh-parametric sharding rules (DP / TP / EP / ZeRO-1).
+
+Rules are *name- and shape-based* over the param pytree, aligned to the LAST
+dimensions of each leaf so stacked-scan leading axes (n_blocks, groups, …)
+are transparently replicated. Divisibility against the actual mesh axis size
+is always checked, with graceful fallback (e.g. whisper's 51,865 vocab is not
+16-divisible → its embedding shards on d_model instead). This is what makes
+elastic restart work: the same rules re-evaluate against any mesh shape.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, trailing-dims rule) — rule entries are per trailing dim, each
+# a tuple of candidate axis names tried in order (first divisible wins), or
+# None for replicated. Earlier rules win.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # MoE expert banks: expert-parallel over "model" on the expert axis when
+    # E divides the axis; otherwise tensor-parallel on the d_ff axis
+    # (mixtral's E=8 < 16 ⇒ TP-in-expert; llama4's E=128 ⇒ EP).
+    (r"moe/(w_gate|w_up)$", "MOE_IN"),
+    (r"moe/w_down$", "MOE_OUT"),
+    # embeddings / output head: shard the vocab-ish big axis.
+    (r"embed$", (("model",), ("model",))),         # try vocab, else d_model
+    (r"lm_head$", (None, ("model",))),
+    (r"router$", (None, ("model",))),
+    # column-parallel (output-dim) projections.
+    (r"(wq|wk|wv|wr|wg|w_gate|w_up|cm_k|cm_r|in_proj_zx|in_proj_bc|frame_proj|patch_proj|"
+     r"wA)$", (None, ("model",))),
+    # row-parallel (input-dim) projections.
+    (r"(wo|w_down|cm_v|out_proj|wB)$", (("model",), None)),
+    # depthwise conv, norms, biases, scalars: replicated.
+]
+
+
+def _spec_for(path: str, shape: tuple[int, ...], axis_sizes: dict) -> P:
+    for pattern, rule in _PARAM_RULES:
+        if re.search(pattern, path):
+            if rule in ("MOE_IN", "MOE_OUT"):
+                if len(shape) < 3:
+                    continue
+                e, lead = shape[-3], [None] * (len(shape) - 3)
+                ms = axis_sizes["model"]
+                if e % ms == 0:
+                    return P(*lead, "model", None, None)
+                ff_dim = -1 if rule == "MOE_IN" else -2
+                if shape[ff_dim] % ms == 0:
+                    tail = [None, None, None]
+                    tail[3 + ff_dim] = "model"
+                    return P(*lead, *tail)
+                return P(*lead, None, None, None)
+            k = len(rule)
+            if len(shape) < k:
+                continue
+            tail = []
+            for dim_size, cand in zip(shape[-k:], rule):
+                picked = None
+                if cand:
+                    for ax in cand if isinstance(cand, tuple) else (cand,):
+                        if dim_size % axis_sizes[ax] == 0:
+                            picked = ax
+                            break
+                tail.append(picked)
+            # "embed" special case: vocab OR d_model over model, never both
+            if path.endswith("embed") and tail[0] == "model":
+                tail[1] = None
+            lead = [None] * (len(shape) - k)
+            return P(*lead, *tail)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a param pytree (shapes or arrays)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        return _spec_for(_path_str(path), leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_specs(p_specs: Any, params_shape: Any, mesh: Mesh,
+                axis: str = "data") -> Any:
+    """ZeRO-1: additionally shard optimizer moments over the data axis on the
+    first dimension that is still replicated and divisible."""
+    size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def one(spec: P, leaf) -> P:
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for p_ in parts:
+            for a in (p_ if isinstance(p_, tuple) else (p_,)):
+                used.add(a)
+        if axis in used:        # already data-sharded (e.g. FSDP params)
+            return P(*parts)
+        for i, (dim, cur) in enumerate(zip(leaf.shape, parts)):
+            if cur is None and dim % size == 0 and dim >= size:
+                parts[i] = axis
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, p_specs, params_shape)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Data inputs: batch axis over ("pod","data") where divisible."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([dict(zip(mesh.axis_names,
+                                    mesh.devices.shape))[a] for a in dp]))
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        if leaf.shape[0] % dp_size == 0 and leaf.shape[0] >= dp_size:
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+_CACHE_RULES: list[tuple[str, tuple]] = [
+    # attention KV cache (B, S, KV, hd): batch→data, SEQUENCE→model
+    # (sequence-parallel decode: scores shard-local, only softmax stats and
+    # the (B,H,1,hd) output cross shards — see EXPERIMENTS.md §Perf)
+    (r"(k|v)$", (("pod", "data"), ("model",), None, None)),
+    # mamba ssm state (B, H, hd, state): hd→model (heads often not divisible)
+    (r"ssm$", (("pod", "data"), ("model",), ("model",), None)),
+    # mamba conv state (B, 3, d_conv): channels→model
+    (r"conv$", (("pod", "data"), None, ("model",))),
+    # rwkv wkv state (B, H, hd, hd)
+    (r"wkv$", (("pod", "data"), ("model",), None, None)),
+    (r"prev_x_(tm|cm)$", (("pod", "data"), None)),
+]
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh) -> Any:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def pick(dim_size, cand):
+        if cand is None:
+            return None
+        if isinstance(cand, tuple) and all(a in ("pod", "data") for a in cand):
+            dp = tuple(a for a in cand if a in mesh.axis_names)
+            if dp and dim_size % int(np.prod([axis_sizes[a] for a in dp])) == 0:
+                return dp
+            return None
+        for ax in cand:
+            if ax in axis_sizes and dim_size % axis_sizes[ax] == 0:
+                return ax
+        return None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pattern, rule in _CACHE_RULES:
+            if re.search(pattern, ps) and len(leaf.shape) >= len(rule):
+                k = len(rule)
+                tail = [pick(d, c) for d, c in zip(leaf.shape[-k:], rule)]
+                # at most ONE "model" placement per leaf
+                seen_model = False
+                for i, t in enumerate(tail):
+                    if t == "model":
+                        if seen_model:
+                            tail[i] = None
+                        seen_model = True
+                lead = [None] * (len(leaf.shape) - k)
+                return P(*lead, *tail)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,159 @@
+"""pjit step builders shared by the trainer, the server and the dry-run.
+
+``build_train_step`` produces a *full* optimizer step: microbatched gradient
+accumulation (a lax.scan over microbatches — XLA's latency-hiding scheduler
+overlaps the per-microbatch gradient all-reduce with the next microbatch's
+backward compute), global-norm clipping, AdamW with ZeRO-1-sharded moments,
+and optional int8 error-feedback gradient compression before the update.
+
+All functions return (step_fn, in_shardings, out_shardings) so the dry-run
+can ``jax.jit(...).lower(...).compile()`` against abstract inputs and the
+trainer can call the same artifact with real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import tuning
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.distributed.compression import ef_int8_compress_decompress
+from repro.models import lm
+from repro.optim import AdamConfig, adam_init, adam_update
+
+
+def shaped_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.key(0), cfg))
+
+
+def shaped_opt_state(params_shape):
+    return jax.eval_shape(adam_init, params_shape)
+
+
+def build_train_step(cfg: ModelConfig, mesh, opt: AdamConfig, *,
+                     microbatches: int = 1, remat: bool = True,
+                     compress_grads: bool = False, zero1: bool = True,
+                     donate: bool = True):
+    p_shape = shaped_params(cfg)
+    p_specs = sharding.param_specs(p_shape, mesh)
+    if tuning.flags().fsdp:
+        # ZeRO-3/FSDP: params shard the data axis too; XLA all-gathers shards
+        # at use and the latency-hiding scheduler overlaps the gathers with
+        # the previous layer's compute (scan-over-blocks structure).
+        p_specs = sharding.zero1_specs(p_specs, p_shape, mesh)
+    m_specs = (sharding.zero1_specs(p_specs, p_shape, mesh)
+               if zero1 else p_specs)
+    o_specs = {"m": m_specs, "v": m_specs,
+               "step": jax.sharding.PartitionSpec()}
+    if compress_grads:
+        o_specs["ef_err"] = m_specs
+
+    def train_step(params, opt_state, batch):
+        def micro_loss(p, mb):
+            loss, metrics = lm.loss_fn(p, cfg, mb, remat=remat)
+            return loss, metrics
+
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    micro_loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+
+        if compress_grads:
+            grads, new_err = ef_int8_compress_decompress(
+                grads, opt_state["ef_err"])
+            opt_state = {**opt_state, "ef_err": new_err}
+
+        params, opt_state = adam_update(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+
+    jit_kw = dict(donate_argnums=(0, 1)) if donate else {}
+
+    def jitted(batch_tree_shape):
+        b_specs = sharding.batch_specs(batch_tree_shape, mesh)
+        return jax.jit(
+            train_step,
+            in_shardings=sharding.named(mesh, (p_specs, o_specs, b_specs)),
+            out_shardings=sharding.named(
+                mesh, (p_specs, o_specs,
+                       {"loss": jax.sharding.PartitionSpec()})),
+            **jit_kw,
+        )
+
+    return jitted, p_specs, o_specs
+
+
+def build_prefill(cfg: ModelConfig, mesh):
+    p_shape = shaped_params(cfg)
+    p_specs = sharding.param_specs(p_shape, mesh)
+
+    def prefill_step(params, batch):
+        logits, _ = lm.prefill(params, cfg, batch)
+        return logits
+
+    def jitted(batch_tree_shape):
+        b_specs = sharding.batch_specs(batch_tree_shape, mesh)
+        return jax.jit(
+            prefill_step,
+            in_shardings=sharding.named(mesh, (p_specs, b_specs)),
+            out_shardings=sharding.named(
+                mesh, sharding.batch_specs(
+                    jax.ShapeDtypeStruct(
+                        (batch_first_dim(batch_tree_shape), 1, cfg.vocab),
+                        jnp.float32), mesh)),
+        )
+
+    return jitted, p_specs
+
+
+def batch_first_dim(batch_tree_shape) -> int:
+    return jax.tree.leaves(batch_tree_shape)[0].shape[0]
+
+
+def build_decode_step(cfg: ModelConfig, mesh):
+    p_shape = shaped_params(cfg)
+    p_specs = sharding.param_specs(p_shape, mesh)
+
+    def decode(params, tokens, caches, pos):
+        return lm.decode_step(params, cfg, tokens, caches, pos)
+
+    def jitted(tokens_shape, caches_shape):
+        c_specs = sharding.cache_specs(caches_shape, mesh)
+        t_specs = sharding.batch_specs(tokens_shape, mesh)
+        logits_spec = sharding.batch_specs(
+            jax.ShapeDtypeStruct(
+                (tokens_shape.shape[0], 1, cfg.vocab), jnp.float32), mesh)
+        return jax.jit(
+            decode,
+            in_shardings=sharding.named(
+                mesh, (p_specs, t_specs, c_specs,
+                       jax.sharding.PartitionSpec())),
+            out_shardings=sharding.named(mesh, (logits_spec, c_specs)),
+            donate_argnums=(2,),
+        )
+
+    return jitted, p_specs

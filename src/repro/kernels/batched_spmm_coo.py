@@ -1,0 +1,93 @@
+"""Batched COO/SparseTensor SpMM — the TPU adaptation of the paper's Batched
+SWA-SpMM for SparseTensor (Fig. 3 + Fig. 5-(a)/(b)).
+
+The GPU version splits work by *non-zero* and resolves output races with
+``atomicAdd`` on shared memory. TPUs have no atomics; the adaptation
+(DESIGN.md §2, "atomics → one-hot MXU scatter") is:
+
+- non-zeros are processed in CHUNK-sized vector groups;
+- the *gather* side (``B[cid]``) is a sublane-axis ``jnp.take``;
+- the *scatter-add* side (``C[rid] += …``) becomes a one-hot matrix product
+  ``P.T @ G`` where ``P[i, r] = (rid[i] == r)`` — a (chunk × m_pad)ᵀ ×
+  (chunk × n_block) contraction that runs on the MXU. Races disappear because
+  the reduction is a dot-product, not a read-modify-write.
+
+Accumulation across chunks happens in a VMEM-resident f32 accumulator — the
+shared-memory-resident output of Fig. 5-(a) — and the column-panel grid
+dimension reproduces the cache blocking of Fig. 5-(b).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.batching import BatchPlan
+
+CHUNK = 128
+
+
+def _kernel(rid_ref, cid_ref, val_ref, b_ref, c_ref, *, m_pad: int, chunks: int):
+    bb = b_ref[0]                                    # (m_pad, n_block)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, m_pad), 1)
+
+    def body(i, acc):
+        sl = pl.dslice(i * CHUNK, CHUNK)
+        rid = rid_ref[0, sl]                         # (CHUNK,)
+        cid = cid_ref[0, sl]
+        val = val_ref[0, sl].astype(jnp.float32)
+        g = jnp.take(bb, cid, axis=0).astype(jnp.float32) * val[:, None]
+        p = (rid[:, None] == row_iota).astype(jnp.float32)   # (CHUNK, m_pad)
+        # scatter-add as MXU contraction: acc[r] += Σ_i p[i, r] * g[i]
+        return acc + jax.lax.dot_general(
+            p, g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(
+        0, chunks, body, jnp.zeros(c_ref.shape[1:], jnp.float32)
+    )
+    c_ref[0] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def batched_spmm_coo(
+    row_ids: jax.Array,   # (batch, nnz_pad) int32
+    col_ids: jax.Array,   # (batch, nnz_pad) int32
+    values: jax.Array,    # (batch, nnz_pad)
+    b: jax.Array,         # (batch, m_pad, n_b)
+    *,
+    plan: BatchPlan,
+    interpret: bool = True,
+) -> jax.Array:
+    batch, nnz_pad = row_ids.shape
+    m_pad, n_b = b.shape[1], b.shape[2]
+    assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+    if nnz_pad % CHUNK:
+        pad = CHUNK - nnz_pad % CHUNK
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)), constant_values=m_pad)
+        col_ids = jnp.pad(col_ids, ((0, 0), (0, pad)))
+        values = jnp.pad(values, ((0, 0), (0, pad)))
+        nnz_pad += pad
+    chunks = nnz_pad // CHUNK
+
+    n_block, p = plan.n_block, plan.p
+    if n_b % n_block:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m_pad=m_pad, chunks=chunks),
+        grid=(batch, p),
+        in_specs=[
+            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
+        interpret=interpret,
+    )(row_ids, col_ids, values, b)
+    return out[..., :n_b]

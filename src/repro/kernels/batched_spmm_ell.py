@@ -1,0 +1,72 @@
+"""Batched ELL SpMM — the TPU adaptation of the paper's Batched SWA-SpMM for
+CSR (atomic-free row-split, Fig. 4 + Fig. 5-(c)/(d)).
+
+Mapping (see DESIGN.md §2):
+- one thread block per (matrix × column panel)  →  one grid step per
+  (matrix × column panel): ``grid = (batch, p)``.
+- subWarp threads striding over n_B columns     →  the 128-lane vector axis
+  covers the column panel directly; rows sit on the sublane axis.
+- shared-memory-resident output                 →  the output block lives in
+  VMEM for the whole grid step; accumulation happens in registers/VMEM.
+- CSR row loop ``for nzid in rpt[r]..rpt[r+1]`` →  dense ELL slot loop
+  ``for k in range(k_pad)`` — the pad-to-max policy of §IV-C moved from
+  "extra threads that terminate immediately" to "zero-valued slots".
+
+The gather ``B[col_ids[:, k], :]`` is a sublane-axis dynamic gather
+(``jnp.take``), which Mosaic supports; padded slots gather row 0 with weight
+0.0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.batching import BatchPlan
+
+
+def _kernel(cid_ref, val_ref, b_ref, c_ref, *, k_pad: int):
+    cid = cid_ref[0]            # (m_pad, k_pad) int32
+    val = val_ref[0]            # (m_pad, k_pad)
+    bb = b_ref[0]               # (m_pad, n_block)
+    acc = jnp.zeros(c_ref.shape[1:], jnp.float32)
+    for k in range(k_pad):      # static unroll; k_pad is small (nnz/row max)
+        rows = jnp.take(bb, cid[:, k], axis=0)          # sublane gather
+        acc = acc + val[:, k].astype(jnp.float32)[:, None] * rows.astype(
+            jnp.float32
+        )
+    c_ref[0] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def batched_spmm_ell(
+    col_ids: jax.Array,   # (batch, m_pad, k_pad) int32
+    values: jax.Array,    # (batch, m_pad, k_pad)
+    b: jax.Array,         # (batch, m_pad, n_b)
+    *,
+    plan: BatchPlan,
+    interpret: bool = True,
+) -> jax.Array:
+    batch, m_pad, k_pad = col_ids.shape
+    n_b = b.shape[-1]
+    assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+    n_block, p = plan.n_block, plan.p
+    if n_b % n_block:
+        pad = p * n_block - n_b
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_pad=k_pad),
+        grid=(batch, p),
+        in_specs=[
+            pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
+        interpret=interpret,
+    )(col_ids, values, b)
+    return out[..., :n_b]

@@ -1,0 +1,132 @@
+"""Flash attention as a Pallas TPU kernel.
+
+The §Roofline finding that motivates this kernel: the pure-XLA chunked
+attention materializes every (q_block × kv_block) score panel to HBM ~6×
+(dot → mask/exp fusion → dot), making every train/prefill cell memory-bound
+(EXPERIMENTS.md §Perf, llama3-8b train_4k: memory term 138s vs compute 4s).
+Keeping the panel in VMEM removes that traffic entirely — the classic flash
+scheme, expressed TPU-natively:
+
+- grid ``(batch, heads, q_blocks, kv_blocks)`` — the LAST axis is innermost
+  and sequential on TPU, so the online-softmax state lives in VMEM scratch
+  across kv steps (no atomics, no cross-core races: the paper's
+  shared-memory-resident accumulator pattern at flash scale);
+- GQA without materializing repeated K/V: the K/V BlockSpec index map sends
+  query-head ``ih`` to kv-head ``ih // groups`` — the repeat happens in the
+  address calculation, not in HBM;
+- causal + sliding-window masking from block indices; fully-masked panels
+  still run (grid is static) but contribute zeros.
+
+Validated in interpret mode against the jnp oracle over shape/dtype sweeps
+(tests/test_kernels.py); the roofline substitution it implies is quantified
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, kv_blocks: int,
+            q_block: int, kv_block: int, tq: int, tk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (qb, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (kvb, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    kpos = ik * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    mask = kpos < tk
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (qb,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention(
+    q: jax.Array,          # (B, Tq, H, hd)
+    k: jax.Array,          # (B, Tk, KV, hd) — GQA handled by index map
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, tq, h, hd = q.shape
+    tk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = hd ** -0.5
+    q_block = min(q_block, tq)
+    kv_block = min(kv_block, tk)
+    nq = -(-tq // q_block)
+    nk = -(-tk // kv_block)
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_block - tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_block - tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_block - tk), (0, 0), (0, 0)))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            kv_blocks=nk, q_block=q_block, kv_block=kv_block, tq=tq, tk=tk),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, hd),
+                         lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            # GQA: kv head = query head // groups — no repeat in HBM
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda ib, ih, iq, ik, g=groups: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda ib, ih, iq, ik, g=groups: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, hd),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq * q_block, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, hd), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :tq]

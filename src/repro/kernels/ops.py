@@ -1,0 +1,138 @@
+"""Public, differentiable wrappers around the batched kernels.
+
+The app-level contract mirrors the paper's TensorFlow integration (§IV-D):
+adjacency matrices arrive as SparseTensor-style COO batches; one call executes
+the whole batch. ``impl`` selects:
+
+- ``"ref"``        pure-jnp batched oracle (scatter-add), XLA-fused;
+- ``"pallas_ell"`` Batched SWA-CSR analogue (row-split ELL Pallas kernel);
+- ``"pallas_coo"`` Batched SWA-SparseTensor analogue (one-hot-scatter kernel);
+- ``"dense"``      densify + batched GEMM (the cuBLAS gemmBatched baseline);
+- ``"pallas_gemm"`` densify + MXU Pallas batched GEMM;
+- ``"loop"``       the NON-batched baseline: one sequential SpMM per sample,
+                   reproducing the paper's per-sample-kernel-launch structure.
+
+The VJP follows the paper's backward-pass batching: dB = batched-SpMM with Aᵀ
+(index swap — free in COO), and dValues is a batched gather-dot. Both run as
+single batched ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batching
+from repro.core.formats import BatchedCOO, coo_to_dense, coo_to_ell
+from repro.kernels import ref
+from repro.kernels.batched_gemm import batched_gemm
+from repro.kernels.batched_spmm_coo import batched_spmm_coo
+from repro.kernels.batched_spmm_ell import batched_spmm_ell
+
+IMPLS = ("ref", "ell", "pallas_ell", "pallas_coo", "dense", "pallas_gemm",
+         "loop")
+
+
+def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
+    batch, m_pad, n_b = b.shape
+    a = BatchedCOO(row_ids, col_ids, values, nnz, jnp.full((batch,), m_pad))
+    if impl == "ref":
+        return ref.batched_spmm_coo_ref(a, b, m_pad)
+    if impl == "loop":
+        # Non-batched baseline: sequential per-sample SpMM (paper Fig. 2 / the
+        # "TF" bars in Fig. 8). Structured as a scan so each sample is its own
+        # sequential step, like one kernel launch per sample.
+        def step(_, args):
+            r, c, v, bb = args
+            return None, ref.spmm_coo_single(r, c, v, bb, m_pad)
+
+        _, out = jax.lax.scan(step, None, (row_ids, col_ids, values, b))
+        return out
+    if impl in ("dense", "pallas_gemm"):
+        a_dense = coo_to_dense(a, m_pad)
+        if impl == "dense":
+            return ref.batched_gemm_ref(a_dense, b)
+        plan = batching.plan_batched_gemm(
+            batch=batch, m=m_pad, n=n_b, k=m_pad, itemsize=b.dtype.itemsize
+        )
+        return batched_gemm(a_dense.astype(b.dtype), b, plan=plan,
+                            interpret=interpret)
+    plan = batching.plan_batched_spmm(
+        batch=batch, m_pad=m_pad, n_b=n_b,
+        slots=k_pad if impl == "pallas_ell" else row_ids.shape[1],
+        itemsize=b.dtype.itemsize,
+    )
+    if plan.case == 3:
+        # Paper case 3: matrices too large for the batched shared-memory
+        # strategy — take the per-sample path.
+        return ref.batched_spmm_coo_ref(a, b, m_pad)
+    if impl in ("pallas_ell", "ell"):
+        if k_pad is None:
+            raise ValueError(f"{impl} requires k_pad (max nnz/row)")
+        ell = coo_to_ell(a, m_pad, k_pad)
+        if impl == "ell":
+            # pure-XLA batched row-split (gather + contraction): the batched
+            # single-op semantics without the Pallas kernel
+            return ref.batched_spmm_ell_ref(ell, b)
+        return batched_spmm_ell(ell.col_ids, ell.values, b, plan=plan,
+                                interpret=interpret)
+    if impl == "pallas_coo":
+        return batched_spmm_coo(row_ids, col_ids, values, b, plan=plan,
+                                interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+
+
+def batched_spmm(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    impl: str = "ref",
+    k_pad: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C[s] = A[s] @ B[s] for every sample s in the batch, one device op.
+
+    a: BatchedCOO over square (m_pad, m_pad) adjacencies; b: (batch, m_pad, n).
+    Differentiable in ``a.values`` and ``b``.
+    """
+
+    row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
+
+    @jax.custom_vjp
+    def f(values, b):
+        return _forward(row_ids, col_ids, nnz, values, b,
+                        impl=impl, k_pad=k_pad, interpret=interpret)
+
+    def fwd(values, b):
+        return f(values, b), (values, b)
+
+    def bwd(res, dc):
+        values, b = res
+        # dB = Aᵀ @ dC — batched SpMM with swapped indices (paper §IV-D:
+        # "The Batched SpMM is also applied to backward propagation").
+        bwd_impl = "pallas_coo" if impl.startswith("pallas") else (
+            impl if impl in ("ref", "loop", "dense") else "ref")
+        db = _forward(col_ids, row_ids, nnz, values, dc,
+                      impl=bwd_impl, k_pad=None, interpret=interpret)
+        # dValues[i] = <dC[rid[i]], B[cid[i]]> — batched gather-dot.
+        def dval_one(rid, cid, dcc, bb):
+            return jnp.sum(
+                jnp.take(dcc, rid, axis=0) * jnp.take(bb, cid, axis=0), axis=-1
+            )
+
+        dval = jax.vmap(dval_one)(row_ids, col_ids, dc, b).astype(values.dtype)
+        return dval, db.astype(b.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f(a.values, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense_batched_matmul(a, b, *, interpret: bool = True):
+    """Standalone MXU batched GEMM entry point (benchmark use)."""
+    plan = batching.plan_batched_gemm(
+        batch=a.shape[0], m=a.shape[1], n=b.shape[-1], k=a.shape[2],
+        itemsize=b.dtype.itemsize,
+    )
+    return batched_gemm(a, b, plan=plan, interpret=interpret)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for the Pallas kernels' allclose sweeps, *and* they
+double as the "non-batched" baseline implementations from the paper:
+
+- ``spmm_coo_single``  == TensorFlow's SparseTensorDenseMatMul (paper Fig. 2),
+  one matrix at a time, which the paper benchmarks as "SpMM (TF)".
+- ``batched_spmm_*_ref`` are the batched semantics (vmap of the single-sample
+  op over the padded batch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BatchedCOO, BatchedCSR, BatchedELL
+
+
+# ---------------------------------------------------------------------------
+# Single-sample (non-batched baseline, paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+def spmm_coo_single(
+    row_ids: jax.Array,
+    col_ids: jax.Array,
+    values: jax.Array,
+    b: jax.Array,
+    m_out: int,
+) -> jax.Array:
+    """C[rid] += val * B[cid] — SparseTensorDenseMatMul semantics. Padded
+    entries (value 0.0) are harmless."""
+    gathered = values[:, None].astype(b.dtype) * b[col_ids]
+    return (
+        jnp.zeros((m_out, b.shape[-1]), b.dtype).at[row_ids].add(gathered)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched references
+# ---------------------------------------------------------------------------
+
+def batched_spmm_coo_ref(a: BatchedCOO, b: jax.Array, m_out: int) -> jax.Array:
+    """a: BatchedCOO, b: (batch, m_pad, n_b) → (batch, m_out, n_b)."""
+    return jax.vmap(lambda r, c, v, bb: spmm_coo_single(r, c, v, bb, m_out))(
+        a.row_ids, a.col_ids, a.values, b
+    )
+
+
+def batched_spmm_ell_ref(a: BatchedELL, b: jax.Array) -> jax.Array:
+    """a: BatchedELL (batch, m_pad, k), b: (batch, m_pad, n_b).
+
+    C[i] = Σ_k values[i,k] * B[col_ids[i,k]] — atomic-free row-split, the
+    SWA-CSR analogue."""
+
+    def one(cid, val, bb):
+        rows = bb[cid]                      # (m_pad, k, n_b) gather
+        return jnp.einsum("mk,mkn->mn", val.astype(bb.dtype), rows)
+
+    return jax.vmap(one)(a.col_ids, a.values, b)
+
+
+def batched_spmm_csr_ref(a: BatchedCSR, b: jax.Array) -> jax.Array:
+    """CSR row-split semantics via position-in-row masking."""
+
+    def one(rpt, cid, val, bb):
+        m_pad = rpt.shape[0] - 1
+        nnz_pad = cid.shape[0]
+        slot = jnp.arange(nnz_pad)
+        # row of each slot = searchsorted over rpt
+        rid = jnp.searchsorted(rpt, slot, side="right") - 1
+        rid = jnp.clip(rid, 0, m_pad - 1)
+        valid = slot < rpt[-1]
+        contrib = jnp.where(valid[:, None], val[:, None].astype(bb.dtype) * bb[cid], 0)
+        return jnp.zeros((m_pad, bb.shape[-1]), bb.dtype).at[rid].add(contrib)
+
+    return jax.vmap(one)(a.rpt, a.col_ids, a.values, b)
+
+
+def batched_gemm_ref(a_dense: jax.Array, b: jax.Array) -> jax.Array:
+    """cuBLAS gemmBatched analogue: (batch, m, k) @ (batch, k, n)."""
+    return jax.lax.batch_matmul(
+        a_dense.astype(b.dtype), b, precision=jax.lax.Precision.HIGHEST
+    )
+
+
+def grouped_matmul_ref(
+    x: jax.Array, group_ids: jax.Array, w: jax.Array
+) -> jax.Array:
+    """out[i] = x[i] @ w[group_ids[i]] — ragged grouped GEMM oracle (MoE)."""
+    return jnp.einsum("td,tdf->tf", x, w[group_ids])

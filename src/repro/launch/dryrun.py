@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape cell) on the
+production meshes, with NO device allocation (jax.ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --cell train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # both meshes
+
+Per cell it records: memory_analysis (fits-per-device proof), cost_analysis
+FLOPs/bytes, the parsed collective schedule, and the three roofline terms —
+JSON under experiments/dryrun/<mesh>/ consumed by EXPERIMENTS.md §Dry-run,
+§Roofline and benchmarks/roofline_table.py.
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs, tuning
+from repro.analysis.roofline import analyze
+from repro.configs.base import SHAPE_CELLS, ModelConfig, ShapeCell
+from repro.distributed.steps import (
+    build_decode_step,
+    build_prefill,
+    build_train_step,
+    shaped_opt_state,
+    shaped_params,
+)
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamConfig
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens (fwd-only)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch          # decode: one token per seq
+
+
+def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+               remat: bool = True, compress_grads: bool = False,
+               zero1: bool = True):
+    """Returns (lowered, p_shape) for the cell's step function."""
+    import numpy as np
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
+    p_shape = shaped_params(cfg)
+    kind, inputs = specs.make_inputs(cfg, cell, dp_size=dp)
+    if kind == "train":
+        builder, _, _ = build_train_step(
+            cfg, mesh, AdamConfig(), microbatches=inputs["microbatches"],
+            remat=remat, compress_grads=compress_grads, zero1=zero1)
+        o_shape = shaped_opt_state(p_shape)
+        if compress_grads:
+            o_shape = dict(o_shape)
+            o_shape["ef_err"] = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, "float32"), p_shape)
+        batch = inputs["batch"]
+        jitted = builder(batch)
+        return jitted.lower(p_shape, o_shape, batch)
+    if kind == "prefill":
+        builder, _ = build_prefill(cfg, mesh)
+        jitted = builder(inputs)
+        return jitted.lower(p_shape, inputs)
+    builder, _ = build_decode_step(cfg, mesh)
+    jitted = builder(inputs["tokens"], inputs["caches"])
+    return jitted.lower(p_shape, inputs["tokens"], inputs["caches"],
+                        inputs["pos"])
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: str,
+             tune: dict | None = None, **lower_kw) -> dict:
+    cfg = configs.get(arch)
+    cell = SHAPE_CELLS[cell_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+    record: dict = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+                    "tune": tune or {}}
+    ok, why = specs.cell_supported(cfg, cell)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with tuning.use_flags(**(tune or {})), tuning.use_mesh_hint(mesh):
+            lowered = lower_cell(cfg, cell, mesh, **lower_kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        report = analyze(compiled, arch=arch, cell=cell_name,
+                         mesh_name=mesh_name, chips=chips,
+                         model_flops_total=model_flops(cfg, cell))
+        record.update(status="ok", lower_s=round(t_lower, 1),
+                      compile_s=round(t_compile, 1), **report.to_json())
+    except Exception as e:  # noqa: BLE001 — a dry-run failure IS the result
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=configs.ARCHS)
+    ap.add_argument("--cell", default=None, choices=list(SHAPE_CELLS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every arch × cell × both meshes")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_ROOT))
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have a JSON record")
+    ap.add_argument("--tune", action="append", default=[],
+                    help="key=value TuneFlags override (repeatable)")
+    ap.add_argument("--suffix", default="",
+                    help="output-file suffix for §Perf variant records")
+    args = ap.parse_args()
+    tune = tuning.parse_tune_args(args.tune)
+
+    archs = [args.arch] if args.arch else list(configs.ARCHS)
+    cells = [args.cell] if args.cell else list(SHAPE_CELLS)
+    if args.all:
+        meshes = [False, True]
+    elif args.multi_pod and not args.single_pod:
+        meshes = [True]
+    elif args.single_pod and not args.multi_pod:
+        meshes = [False]
+    else:
+        meshes = [False, True]
+
+    n_err = 0
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        out_dir = os.path.join(args.out, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        for arch in archs:
+            for cell in cells:
+                sfx = f"__{args.suffix}" if args.suffix else ""
+                path = os.path.join(out_dir, f"{arch}__{cell}{sfx}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {mesh_name} {arch} {cell}")
+                    continue
+                rec = run_cell(arch, cell, multi_pod, out_dir, tune=tune,
+                               remat=not args.no_remat,
+                               compress_grads=args.compress_grads)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"compute={rec['t_compute']:.4f}s "
+                             f"memory={rec['t_memory']:.4f}s "
+                             f"coll={rec['t_collective']:.4f}s "
+                             f"bottleneck={rec['bottleneck']} "
+                             f"peak_frac={rec['peak_fraction']:.3f}")
+                elif status == "error":
+                    n_err += 1
+                    extra = rec["error"][:160]
+                else:
+                    extra = rec["reason"][:80]
+                print(f"[{status}] {mesh_name} {arch} {cell} {extra}",
+                      flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Input construction for every (architecture × shape cell).
+
+``make_inputs(cfg, cell, concrete=False)`` returns the exact pytree the
+train/prefill/decode step consumes — as ``jax.ShapeDtypeStruct`` stand-ins for
+the dry-run (no allocation) or as zero arrays for smoke tests. This is the
+single source of truth for cell applicability (``cell_supported``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import lm
+
+WHISPER_DEC_RATIO = 8        # decoder tokens per encoder frame (train cells)
+WHISPER_DEC_ENC_LEN = 4096   # encoder context used by decode cells
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """Applicability per DESIGN.md §4."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention: 512k dense-KV decode is "
+                       "out of scope for this config (no sub-quadratic "
+                       "mechanism) — see DESIGN.md §4")
+    if cell.name == "long_500k" and cfg.is_encoder_decoder:
+        return False, "enc-dec audio model: 500k-token decode is meaningless"
+    return True, ""
+
+
+def _mk(shape, dtype, concrete):
+    if concrete:
+        return jnp.zeros(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, concrete=False):
+    out = {"tokens": _mk((batch, seq), jnp.int32, concrete)}
+    if cfg.frontend == "vision_tiles":
+        n_tiles = min(cfg.frontend_len, max(seq // 4, 8))
+        out["patch_embeds"] = _mk((batch, n_tiles, lm.VISION_DIM),
+                                  jnp.float32, concrete)
+    if cfg.is_encoder_decoder:
+        out["frames"] = _mk((batch, seq, lm.AUDIO_DIM), jnp.float32, concrete)
+        out["tokens"] = _mk((batch, max(seq // WHISPER_DEC_RATIO, 8)),
+                            jnp.int32, concrete)
+    return out
+
+
+def make_decode_inputs(cfg: ModelConfig, batch: int, cache_len: int,
+                       concrete=False):
+    """(tokens, caches, pos) for one decode step."""
+    tokens = _mk((batch, 1), jnp.int32, concrete)
+    enc_len = WHISPER_DEC_ENC_LEN if cfg.is_encoder_decoder else 0
+    if concrete:
+        caches = lm.init_decode_state(cfg, batch, cache_len, enc_len)
+        pos = jnp.asarray(cache_len, jnp.int32)
+    else:
+        caches = jax.eval_shape(
+            lambda: lm.init_decode_state(cfg, batch, cache_len, enc_len))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, caches, pos
+
+
+def make_inputs(cfg: ModelConfig, cell: ShapeCell, concrete=False,
+                dp_size: int = 1):
+    """Returns (kind, inputs-pytree) for the cell. ``dp_size`` caps the
+    gradient-accumulation depth so each microbatch still spans every
+    data-parallel shard (per-microbatch batch ≥ dp_size)."""
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {cell.name}: {why}")
+    if cell.kind == "train":
+        microbatches = min(cell.microbatches,
+                           max(1, cell.global_batch // max(dp_size, 1)))
+        return "train", {
+            "microbatches": microbatches,
+            "batch": make_train_batch(
+                cfg, cell.global_batch, cell.seq_len, concrete),
+        }
+    if cell.kind == "prefill":
+        return "prefill", make_train_batch(cfg, cell.global_batch,
+                                           cell.seq_len, concrete)
+    tokens, caches, pos = make_decode_inputs(
+        cfg, cell.global_batch, cell.seq_len, concrete)
+    return "decode", {"tokens": tokens, "caches": caches, "pos": pos}

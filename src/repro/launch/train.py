@@ -1,0 +1,77 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+        --steps 200 --batch 8 --seq 128 --checkpoint-dir /tmp/ck
+
+On this container the full configs only dry-run; ``--reduced`` trains the
+same-family small config end-to-end on CPU. On a real fleet the same entry
+point runs the full config against the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch import specs
+from repro.optim import AdamConfig
+from repro.training import Trainer, TrainerConfig
+
+
+def synthetic_data(cfg, batch, seq, seed=0, start_step=0):
+    """Resumable synthetic next-token stream (repro.data.tokens): batch i is
+    a pure function of (seed, i), so restart == exact resume."""
+    from repro.data.tokens import TokenStreamSpec, token_stream
+
+    spec = TokenStreamSpec(vocab=cfg.vocab, batch=batch, seq_len=seq,
+                           seed=seed)
+    extras = {k: v for k, v in specs.make_train_batch(
+        cfg, batch, seq, concrete=True).items() if k != "tokens"}
+    for b in token_stream(spec, start_step=start_step):
+        yield {**extras, **b}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--mesh", default="1x1",
+                    help='"DxM" data×model, or "production"/"multipod"')
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "production":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        microbatches=args.microbatches, remat=args.remat,
+        compress_grads=args.compress_grads)
+    trainer = Trainer(cfg, mesh, AdamConfig(lr=args.lr, grad_clip=1.0), tcfg)
+    data = synthetic_data(cfg, args.batch, args.seq)
+    trainer.fit(data, on_metrics=lambda s, rec: print(
+        f"step {s}: loss {rec['loss']:.4f}", flush=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Assigned-architecture model zoo (pure-functional JAX, scan-over-layers)."""

@@ -1,0 +1,521 @@
+"""Shared neural-net layers for the architecture zoo.
+
+Everything is pure-functional: ``init_*`` builds param pytrees, ``*_apply``
+consumes them. Attention is *chunked* (online-softmax over KV blocks, a pure
+JAX flash-attention) so 32k-prefill cells lower with O(block²) live memory
+instead of O(seq²); sliding-window and cross-attention reuse the same body.
+
+MoE expert compute is the paper's technique surfacing at LM scale: token
+dispatch produces a batch of small per-expert GEMMs executed as ONE batched
+einsum (``ecd,edf->ecf``) — exactly the batched-small-matmul structure of
+Batched SpMM, with the same pad-to-capacity policy as `core.batching`
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro import tuning
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def init_layer_norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., T, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    init = jax.nn.initializers.normal(0.02)
+    p = {
+        "wq": init(ks[0], (d, h * hd), dtype),
+        "wk": init(ks[1], (d, kv * hd), dtype),
+        "wv": init(ks[2], (d, kv * hd), dtype),
+        "wo": init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, T, KV, hd) → (B, T, KV·groups, hd)."""
+    return jnp.repeat(k, groups, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Tq, H, hd)
+    k: jax.Array,          # (B, Tk, H, hd)   (already GQA-expanded)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    window: int = 0,
+    q_block: int = 0,
+    kv_block: int = 0,
+) -> jax.Array:
+    """Online-softmax blocked attention (pure-JAX flash attention).
+
+    Memory is O(q_block × kv_block) per step instead of O(Tq × Tk); a 32k
+    prefill lowers with MBs of live score memory rather than TBs.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    scale = hd ** -0.5
+    q_block = min(q_block or tuning.flags().q_block, tq)
+    kv_block = min(kv_block or tuning.flags().kv_block, tk)
+    nq = -(-tq // q_block)
+    nk = -(-tk // kv_block)
+    # pad to block multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_block - tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_block - tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_block - tk), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, q_block, h, hd)
+    kp = kp.reshape(b, nk, kv_block, h, hd)
+    vp = vp.reshape(b, nk, kv_block, h, hd)
+
+    q_pos = q_offset + jnp.arange(nq * q_block).reshape(nq, q_block)
+    k_pos = jnp.arange(nk * kv_block).reshape(nk, kv_block)
+    k_valid = (jnp.arange(nk * kv_block) < tk).reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        qb, qpos = qi                                  # (B, qb, H, hd)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, kpos, kval = ki
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, :]
+                               <= qpos[None, None, :, None])
+            if window:
+                mask = mask & (kpos[None, None, None, :]
+                               > qpos[None, None, :, None] - window)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isneginf(m), m_safe, m) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        m0 = jnp.full((b, h, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4),
+             k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.transpose(0, 2, 1, 3)         # (B, qb, H, hd)
+
+    # scan over q blocks; qp axes → (nq, B, qb, H, hd)
+    _, out = jax.lax.scan(
+        q_step, None, (qp.transpose(1, 0, 2, 3, 4), q_pos))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_block, h, hd)
+    return out[:, :tq].astype(q.dtype)
+
+
+def packed_causal_attention(
+    q: jax.Array,          # (B, T, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    block: int = 0,
+) -> jax.Array:
+    """Triangle-packed blocked attention (§Perf iteration, beyond-paper).
+
+    The plain chunked scan visits all nq×nk block pairs; for causal masks
+    ~half are fully masked, and for sliding windows all but a diagonal band.
+    Here the (iq, ik) pair list is STATIC (numpy tril + window band filter),
+    so skipped blocks cost nothing — compute AND panel traffic drop ~2× for
+    causal, ~S/window× for windowed prefill. Online-softmax state (acc, m, l)
+    is carried per q-block and updated at dynamic index iq; the merge is
+    order-independent, so one flat scan over the pair list suffices.
+    """
+    import numpy as np
+
+    b, t, h, hd = q.shape
+    block = block or max(tuning.flags().q_block, tuning.flags().kv_block)
+    block = min(block, t)
+    nb = -(-t // block)
+    pad = nb * block - t
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (nb, B, blk, H, hd) — leading block axis for dynamic gathering
+    qp = qp.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    kp = kp.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+
+    iqs, iks = np.tril_indices(nb)
+    if window:
+        # keep only block pairs intersecting the window band
+        keep = (iks + 1) * block - 1 > iqs * block - window
+        iqs, iks = iqs[keep], iks[keep]
+    scale = hd ** -0.5
+
+    def step(carry, pair):
+        acc, m, l = carry
+        iq, ik = pair
+        qb = jnp.take(qp, iq, axis=0)               # (B, blk, H, hd)
+        kb = jnp.take(kp, ik, axis=0)
+        vb = jnp.take(vp, ik, axis=0)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = iq * block + jax.lax.broadcasted_iota(
+            jnp.int32, (block, block), 0)
+        kpos = ik * block + jax.lax.broadcasted_iota(
+            jnp.int32, (block, block), 1)
+        mask = (kpos <= qpos) & (kpos < t)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_blk = jnp.take(m, iq, axis=0)             # (B, H, blk)
+        l_blk = jnp.take(l, iq, axis=0)
+        a_blk = jnp.take(acc, iq, axis=0)           # (B, H, blk, hd)
+        m_new = jnp.maximum(m_blk, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(mask[None, None],
+                      jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m_blk), m_safe, m_blk) - m_safe)
+        l_new = l_blk * corr + jnp.sum(p, axis=-1)
+        a_new = a_blk * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb, preferred_element_type=jnp.float32)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, iq, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, iq, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, iq, 0)
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((nb, b, h, block, hd), jnp.float32)
+    m0 = jnp.full((nb, b, h, block), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nb, b, h, block), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.asarray(iqs, jnp.int32), jnp.asarray(iks, jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]      # (nb, B, H, blk, hd)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nb * block, h, hd)
+    return out[:, :t].astype(q.dtype)
+
+
+def attention_apply(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,                  # (B, T, D)
+    *,
+    positions: jax.Array,          # (B, T)
+    causal: bool = True,
+    kv_cache: dict | None = None,  # decode: {"k","v"} (B, S, KV, hd) ring/linear
+    cache_pos: jax.Array | None = None,  # () int32 current absolute position
+    xa: jax.Array | None = None,   # cross-attention source (B, Ta, D)
+    cache_mode: str = "write",     # "write" (self decode) | "read_all" (cross)
+):
+    """Self/cross attention with GQA, optional qk-norm, RoPE, window and an
+    optional decode-time KV cache. Returns (out, new_kv_cache)."""
+    b, t, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, hd)
+    if kv_cache is not None and cache_mode == "read_all":
+        # cross-attention over a precomputed, static cache: no projection of
+        # the source, no cache update, every slot valid.
+        k, v = kv_cache["k"], kv_cache["v"]
+        if cfg.qk_norm:
+            q = rms_norm(p["q_norm"], q)
+        groups = h // k.shape[2]
+        k = _repeat_kv(k, groups)
+        v = _repeat_kv(v, groups)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v).astype(x.dtype)
+        return (out.reshape(b, t, h * hd) @ p["wo"]).astype(x.dtype), kv_cache
+    src = xa if xa is not None else x
+    k = (src @ p["wk"]).reshape(b, src.shape[1], kv, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if xa is None:                                     # RoPE on self-attn only
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = kv_cache
+    if kv_cache is not None and xa is None:
+        # decode: write this step's K/V at cache_pos (ring buffer if window)
+        s_cache = kv_cache["k"].shape[1]
+        slot = cache_pos % s_cache if cfg.window else cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, slot, 0, 0))
+        if tuning.flags().constrain_decode:
+            # sequence-parallel KV: pin the cache (and its update) to
+            # S-sharding over "model"; scores are then shard-local and only
+            # the (B,H,1) softmax stats + (B,H,1,hd) output cross shards.
+            dp = ("pod", "data")
+            ck = tuning.constrain(ck, dp, "model", None, None)
+            cv = tuning.constrain(cv, dp, "model", None, None)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+
+    if kv_cache is not None and xa is None:
+        # single-token decode: direct (non-chunked) attention over the cache
+        s_cache = k.shape[1]
+        scale = hd ** -0.5
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        if tuning.flags().constrain_decode:
+            # sequence-parallel decode attention: scores stay sharded on the
+            # cache's S axis; only the softmax max/sum stats ((B,H,1) - bytes)
+            # and the (B,H,1,hd) output reduction cross shards.
+            s = tuning.constrain(s, ("pod", "data"), None, None, "model")
+        slots = jnp.arange(s_cache)
+        if cfg.window:
+            # ring buffer (possibly larger than the window for 128-alignment):
+            # slot s currently holds absolute position
+            #   p_s = cache_pos - ((cache_pos - s) mod s_cache);
+            # valid iff it exists (p_s ≥ 0) and is inside the window.
+            age = jnp.mod(cache_pos - slots, s_cache)
+            exists = (slots <= cache_pos) | (cache_pos >= s_cache)
+            valid = exists & (age < cfg.window)
+        else:
+            valid = slots <= cache_pos
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        if tuning.flags().constrain_decode:
+            w = tuning.constrain(w, ("pod", "data"), None, None, "model")
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v).astype(x.dtype)
+    elif tuning.flags().attention_impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(q, k, v, causal=causal and xa is None,
+                              window=cfg.window).astype(x.dtype)
+    elif (tuning.flags().attention_impl == "xla_packed"
+          and causal and xa is None and k.shape[1] == q.shape[1]):
+        out = packed_causal_attention(q, k, v, window=cfg.window)
+    else:
+        out = chunked_attention(q, k, v, causal=causal and xa is None,
+                                window=cfg.window)
+    out = out.reshape(b, t, h * hd) @ p["wo"]
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU and MoE
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "w_gate": init(ks[0], (d, d_ff), dtype),
+        "w_up": init(ks[1], (d, d_ff), dtype),
+        "w_down": init(ks[2], (d_ff, d), dtype),
+    }
+
+
+def ffn_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 5)
+    init = jax.nn.initializers.normal(0.02)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": init(ks[0], (d, e), jnp.float32),
+        "w_gate": init(ks[1], (e, d, f), dtype),
+        "w_up": init(ks[2], (e, d, f), dtype),
+        "w_down": init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_ffn(ks[4], d, f, dtype)
+    return p
+
+
+def _moe_grouped(p, cfg: ModelConfig, x, capacity_factor):
+    """Grouped local dispatch: each sequence is its own dispatch group with
+    its own capacity — no cross-batch scatter, so the dispatch stays local to
+    the data shard (what real EP systems do: dispatch group == DP shard).
+    The batch dim rides through the expert GEMM as a leading batch axis."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(capacity_factor * t * k / e), 8)
+    cap = -(-cap // 8) * 8
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, k)             # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(eids[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = eids.reshape(b, t * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)     # (B, T·k, E)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1).astype(jnp.int32) - 1
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)
+    xk = jnp.repeat(x, k, axis=1)                             # (B, T·k, D)
+
+    def scatter_one(xe, fe, sl):
+        return jnp.zeros((e, cap + 1, d), x.dtype).at[fe, sl].add(xe)
+
+    # vmap over the batch dim so the scatter carries an explicit batch
+    # dimension — GSPMD then partitions it over "data" instead of gathering
+    # operands across the mesh (the §Perf fix for the 8.7 TB dispatch gather).
+    buf = jax.vmap(scatter_one)(xk, flat_e, slot)
+    buf = buf[:, :, :cap]
+    dp = ("pod", "data")
+    ms = tuning.axis_size("model")
+    ep = bool(ms) and e % ms == 0        # expert-parallel vs TP-in-expert
+    if ep:
+        # EP: experts across "model"; activations follow the expert axis.
+        buf = tuning.constrain(buf, dp, "model", None, None)
+    else:
+        buf = tuning.constrain(buf, dp, None, None, None)
+    hidden = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    # TP-in-expert (E < mesh axis, e.g. mixtral E=8 on 16): the hidden d_ff
+    # axis carries the "model" sharding instead — matches the F-sharded
+    # expert weights, so no gather of either operand is ever needed.
+    hidden = (tuning.constrain(hidden, dp, "model", None, None) if ep
+              else tuning.constrain(hidden, dp, None, None, "model"))
+    out_buf = jnp.einsum("becf,efd->becd", hidden, p["w_down"])
+    out_buf = (tuning.constrain(out_buf, dp, "model", None, None) if ep
+               else tuning.constrain(out_buf, dp, None, None, None))
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))
+    gathered = jax.vmap(lambda ob, fe, sl: ob[fe, sl])(
+        out_buf, flat_e, slot)                                # (B, T·k, D)
+    gathered = gathered * (gate_vals.reshape(b, t * k, 1).astype(x.dtype)
+                           * keep[..., None].astype(x.dtype))
+    out = gathered.reshape(b, t, k, d).sum(axis=2)
+    if cfg.shared_expert:
+        out = out + ffn_apply(p["shared"], x)
+    return out, aux
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array, *, capacity_factor=None):
+    """Top-k MoE with capacity dispatch + ONE batched expert GEMM.
+
+    The dispatch buffer is (E, C, D) — a batch of E small (C × D) matrices —
+    and expert compute is a single einsum over the expert axis: the LM-scale
+    incarnation of the paper's Batched SpMM/GEMM (one op for the whole batch
+    of small matmuls instead of E sequential kernels). Returns (out, aux_loss).
+    """
+    if capacity_factor is None:
+        capacity_factor = tuning.flags().capacity_factor
+    if tuning.flags().moe_dispatch == "grouped":
+        return _moe_grouped(p, cfg, x, capacity_factor)
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * t
+    xf = x.reshape(n, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, k)           # (n, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch/GShard style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(eids[:, 0], e, dtype=jnp.float32)), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(int(capacity_factor * n * k / e), 8)
+    cap = -(-cap // 8) * 8
+    flat_e = eids.reshape(-1)                            # (n·k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1).astype(jnp.int32) - 1
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                     # overflow → slot `cap`
+    # dispatch: (E, C+1, D) scatter, slot `cap` is the drop bucket
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    xk = jnp.repeat(xf, k, axis=0)
+    buf = buf.at[flat_e, slot].add(xk)
+    buf = buf[:, :cap]
+    sharded = tuning.flags().moe_dispatch == "sharded_scatter"
+    if sharded:
+        # expert-parallel pin: dispatch buffer, expert activations and the
+        # return buffer all shard the EXPERT axis over "model", so the three
+        # expert GEMMs run 1/16-sized per device with an all-to-all at the
+        # dispatch boundary instead of replicated expert compute.
+        buf = tuning.constrain(buf, "model", None, None)
+    # one batched GEMM over all experts (the paper's single-kernel batch)
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if sharded:
+        hidden = tuning.constrain(hidden, "model", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, p["w_down"])
+    if sharded:
+        out_buf = tuning.constrain(out_buf, "model", None, None)
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
+    # combine
+    gathered = out_buf[flat_e, slot]                     # (n·k, d)
+    if sharded:
+        gathered = tuning.constrain(gathered, ("pod", "data"), None)
+    gathered = gathered * (gate_vals.reshape(-1, 1).astype(x.dtype)
+                           * keep[:, None].astype(x.dtype))
+    out = gathered.reshape(n, k, d).sum(axis=1)
+    if cfg.shared_expert:
+        out = out + ffn_apply(p["shared"], xf)
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,267 @@
+"""Attention-free sequence mixers: RWKV-6 "Finch" and Mamba2 (for Zamba2).
+
+Both expose the same contract as attention: ``(params, cfg, x, state) →
+(out, new_state)`` where ``state`` is the O(1) decode state (this is what
+makes the `long_500k` cell runnable for these families — no KV cache).
+
+Training/prefill processes the sequence with `lax.scan` over time by default;
+`mamba2_apply` also has a *chunked* path (`chunk > 0`) that rewrites the
+scalar-decay recurrence as block matmuls (intra-chunk attention-like matmul +
+inter-chunk state carry) — MXU-friendly, numerically stable because decay
+factors within a chunk are ≤ 1. The chunked path is a perf-pass option
+benchmarked in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import tuning
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_rms_norm, rms_norm
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear recurrence
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 10)
+    init = jax.nn.initializers.normal(0.02)
+    lora = 64
+    return {
+        # time-mix lerp coefficients (mu) for r, k, v, g, w
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "wr": init(ks[1], (d, d), dtype),
+        "wk": init(ks[2], (d, d), dtype),
+        "wv": init(ks[3], (d, d), dtype),
+        "wg": init(ks[4], (d, d), dtype),
+        "wo": init(ks[5], (d, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(xw A) B))  (Finch)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": init(ks[6], (d, lora), dtype),
+        "wB": init(ks[7], (lora, d), dtype),
+        "u": jax.random.uniform(ks[8], (h, hd), jnp.float32) - 0.5,  # bonus
+        "ln_x": init_rms_norm(d),
+        # channel mix
+        "cm_mu": jax.random.uniform(ks[9], (2, d), jnp.float32),
+        "cm_k": init(jax.random.fold_in(key, 1), (d, cfg.d_ff), dtype),
+        "cm_v": init(jax.random.fold_in(key, 2), (cfg.d_ff, d), dtype),
+        "cm_r": init(jax.random.fold_in(key, 3), (d, d), dtype),
+        # pre-norms (RWKV blocks carry their own norms + residuals)
+        "ln1": init_rms_norm(d),
+        "ln2": init_rms_norm(d),
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "prev_x_tm": jnp.zeros((batch, d), jnp.float32),   # token shift (time)
+        "prev_x_cm": jnp.zeros((batch, d), jnp.float32),   # token shift (chan)
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def rwkv_apply(p, cfg: ModelConfig, x: jax.Array, state: dict):
+    """x: (B, T, D). Runs time-mix + channel-mix (one full RWKV block)."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+
+    # ---- time mix ----
+    x_res = x
+    x = rms_norm(p["ln1"], x)
+    x_prev = jnp.concatenate(
+        [state["prev_x_tm"][:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    xx = x_prev - x
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + xx * mu[i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, t, h, hd)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd)
+    g = xg @ p["wg"]
+    logw = -jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32))
+    w = jnp.exp(logw).reshape(b, t, h, hd)                 # decay ∈ (0, 1)
+    u = p["u"]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B, H, hd, hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    rs, ks_, vs, ws = (a.transpose(1, 0, 2, 3).astype(jnp.float32)
+                       for a in (r, k, v, w))
+    wkv_state, out = jax.lax.scan(step, state["wkv"], (rs, ks_, vs, ws))
+    out = out.transpose(1, 0, 2, 3).reshape(b, t, d)
+    out = rms_norm(p["ln_x"], out.astype(x.dtype))
+    out = out * jax.nn.silu(g)
+    y_res = x_res + (out @ p["wo"]).astype(x.dtype)
+
+    # ---- channel mix ----
+    y = rms_norm(p["ln2"], y_res)
+    y_prev = jnp.concatenate(
+        [state["prev_x_cm"][:, None].astype(y.dtype), y[:, :-1]], axis=1)
+    yy = y_prev - y
+    cmu = p["cm_mu"].astype(y.dtype)
+    yk = y + yy * cmu[0]
+    yr = y + yy * cmu[1]
+    kk = jnp.square(jax.nn.relu(yk @ p["cm_k"]))
+    out_cm = jax.nn.sigmoid(yr @ p["cm_r"]) * (kk @ p["cm_v"])
+    z = y_res + out_cm.astype(y.dtype)
+
+    new_state = {
+        "prev_x_tm": x[:, -1].astype(jnp.float32),
+        "prev_x_cm": y[:, -1].astype(jnp.float32),
+        "wkv": wkv_state,
+    }
+    return z, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — scalar-per-head decay selective state space
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner = 2 * d
+    nheads = cfg.ssm_heads or max(1, d_inner // 128)
+    state = cfg.ssm_state or 64
+    ks = jax.random.split(key, 5)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        # z,x / B,C / dt projections kept separate so every output dim is
+        # mesh-divisible (a fused 2·d_inner+2·state+heads dim is not)
+        "in_proj_zx": init(ks[3], (d, 2 * d_inner), dtype),
+        "in_proj_bc": init(ks[4], (d, 2 * state), dtype),
+        "in_proj_dt": init(ks[0], (d, nheads), dtype),
+        "conv_w": init(ks[1], (4, d_inner + 2 * state), dtype),   # depthwise
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm": init_rms_norm(d_inner),
+        "out_proj": init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d_inner = 2 * cfg.d_model
+    nheads = cfg.ssm_heads or max(1, d_inner // 128)
+    state = cfg.ssm_state or 64
+    hd = d_inner // nheads
+    return {
+        "conv": jnp.zeros((batch, 3, d_inner + 2 * state), jnp.float32),
+        "ssm": jnp.zeros((batch, nheads, hd, state), jnp.float32),
+    }
+
+
+def mamba_apply(p, cfg: ModelConfig, x: jax.Array, state: dict, *,
+                chunk: int = 0):
+    """x: (B, T, D) → (out, new_state). `chunk>0` selects the SSD blocked path."""
+    b, t, d = x.shape
+    if chunk == 0:
+        c = tuning.flags().mamba_chunk
+        if c and t > 1 and t % c == 0:
+            chunk = c
+    d_inner = 2 * d
+    nheads = cfg.ssm_heads or max(1, d_inner // 128)
+    nstate = cfg.ssm_state or 64
+    hd = d_inner // nheads
+
+    zx = x @ p["in_proj_zx"]
+    z, xs_raw = jnp.split(zx, [d_inner], axis=-1)
+    bc = x @ p["in_proj_bc"]
+    dt = x @ p["in_proj_dt"]
+    xbc = jnp.concatenate([xs_raw, bc], axis=-1)
+    # depthwise causal conv over (x, B, C), kernel 4, carrying conv state
+    xbc_hist = jnp.concatenate(
+        [state["conv"].astype(xbc.dtype), xbc], axis=1)      # (B, T+3, ·)
+    conv_w = p["conv_w"]
+    xbc_conv = sum(
+        xbc_hist[:, i:i + t] * conv_w[i] for i in range(4))
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xs, bmat, cmat = jnp.split(xbc_conv, [d_inner, d_inner + nstate], axis=-1)
+    xs = xs.reshape(b, t, nheads, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    a = -jnp.exp(p["a_log"])                                  # (H,) negative
+    decay = jnp.exp(dt * a)                                   # (B, T, H) ∈ (0,1)
+    bx = (dt[..., None] * xs.astype(jnp.float32))             # (B,T,H,hd) scaled
+
+    if chunk:
+        y = _ssd_chunked(xs, bmat, cmat, decay, bx, state["ssm"], chunk)
+        yout, new_ssm = y
+    else:
+        def step(s, inp):
+            bxt, bt_, ct, dect = inp
+            s = dect[..., None, None] * s \
+                + bxt[..., None] * bt_[:, None, None, :]
+            yt = jnp.einsum("bhds,bs->bhd", s, ct)
+            return s, yt
+
+        seq = (bx.transpose(1, 0, 2, 3),
+               bmat.transpose(1, 0, 2).astype(jnp.float32),
+               cmat.transpose(1, 0, 2).astype(jnp.float32),
+               decay.transpose(1, 0, 2))
+        new_ssm, ys = jax.lax.scan(step, state["ssm"], seq)
+        yout = ys.transpose(1, 0, 2, 3)                       # (B, T, H, hd)
+
+    yout = yout + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    yout = yout.reshape(b, t, d_inner).astype(x.dtype)
+    yout = rms_norm(p["norm"], yout) * jax.nn.silu(z)
+    out = yout @ p["out_proj"]
+    new_state = {
+        "conv": xbc_hist[:, -3:].astype(jnp.float32),
+        "ssm": new_ssm,
+    }
+    return out.astype(x.dtype), new_state
+
+
+def _ssd_chunked(xs, bmat, cmat, decay, bx, s0, chunk):
+    """SSD blocked evaluation: intra-chunk 'attention' matmul + inter-chunk
+    carried state. decay is scalar per (B, T, H) ⇒ the pairwise factor
+    exp(L_i − L_j) ≤ 1 for i ≥ j, so the blocked form is stable."""
+    b, t, h, hd = xs.shape
+    n = t // chunk
+    assert t % chunk == 0, (t, chunk)
+    ns = bmat.shape[-1]
+    logd = jnp.log(jnp.maximum(decay, 1e-38))                 # (B, T, H)
+    bx_c = bx.reshape(b, n, chunk, h, hd)
+    bm_c = bmat.reshape(b, n, chunk, ns).astype(jnp.float32)
+    cm_c = cmat.reshape(b, n, chunk, ns).astype(jnp.float32)
+    ld_c = logd.reshape(b, n, chunk, h)
+    lcum = jnp.cumsum(ld_c, axis=2)                           # inclusive
+    ltot = lcum[:, :, -1]                                     # (B, N, H)
+
+    # intra-chunk: y_i += Σ_{j≤i} exp(lcum_i - lcum_j) (c_i·b_j) bx_j
+    scores = jnp.einsum("bncs,bnks->bnck", cm_c, bm_c)        # (B,N,C,C)
+    rel = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]     # (B,N,C,C,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(causal[None, None, :, :, None],
+                    jnp.exp(rel), 0.0) * scores[..., None]
+    y_intra = jnp.einsum("bnckh,bnkhd->bnchd", att, bx_c)
+
+    # inter-chunk: carry state across chunks with a scan over N
+    chunk_kv = jnp.einsum("bnkh,bnks,bnkhd->bnhds",
+                          jnp.exp(ltot[:, :, None, :] - lcum), bm_c, bx_c)
+
+    def carry(s, inp):
+        kv, lt, cm, lc = inp                                  # per chunk
+        # y_cross_i = c_i · (exp(lcum_i) * s)
+        y = jnp.einsum("bch,bcs,bhds->bchd", jnp.exp(lc), cm, s)
+        s = jnp.exp(lt)[:, :, None, None] * s + kv
+        return s, y
+
+    s_fin, y_cross = jax.lax.scan(
+        carry, s0,
+        (chunk_kv.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2),
+         cm_c.transpose(1, 0, 2, 3), lcum.transpose(1, 0, 2, 3)))
+    y = y_intra + y_cross.transpose(1, 0, 2, 3, 4)
+    return y.reshape(b, t, h, hd), s_fin

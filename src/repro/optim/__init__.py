@@ -1,0 +1,7 @@
+from repro.optim.adam import (  # noqa: F401
+    AdamConfig,
+    adam_init,
+    adam_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)

@@ -1,0 +1,94 @@
+"""Batched serving engine (wave-scheduled, slot-masked).
+
+The Batched-SpMM philosophy applied to serving: a batch of small independent
+jobs becomes ONE compiled decode step per token, never one dispatch per
+request. Requests are served in waves of ``batch`` slots:
+
+- prompts in a wave are left-padded to a common length and prefilled in
+  lockstep through the shared decode step (one compiled program total — the
+  decode cell of the dry-run);
+- finished sequences are masked (their sampled tokens discarded) so one long
+  request cannot stall completed ones' results — and the wave ends as soon as
+  EVERY slot is done, at which point the next wave refills all slots;
+- sampling is greedy or temperature-categorical.
+
+A production multi-host engine would add per-slot position vectors for true
+continuous batching; the step function and caches already support restarting
+a slot, so that is a scheduler change, not a model change.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch: int = 4,
+                 max_len: int = 128, temperature: float = 0.0, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len = batch, max_len
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, cfg, t, c, pos))
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature)
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        n = len(wave)
+        maxp = max(len(r.prompt) for r in wave)
+        toks = np.zeros((self.batch, maxp), np.int32)
+        for s, r in enumerate(wave):
+            toks[s, maxp - len(r.prompt):] = r.prompt    # left padding
+        caches = lm.init_decode_state(self.cfg, self.batch, self.max_len)
+        # lockstep prefill through the decode step (positions shared)
+        last = None
+        for i in range(maxp):
+            last, caches = self._decode(
+                self.params, jnp.asarray(toks[:, i:i + 1]), caches,
+                jnp.asarray(i, jnp.int32))
+        pos = maxp
+        cur = np.asarray(self._sample(last[:, 0, :]))
+        active = np.array([True] * n + [False] * (self.batch - n))
+        for s, r in enumerate(wave):
+            r.out.append(int(cur[s]))
+        while active.any() and pos < self.max_len - 1:
+            logits, caches = self._decode(
+                self.params, jnp.asarray(cur.reshape(-1, 1)), caches,
+                jnp.asarray(pos, jnp.int32))
+            cur = np.asarray(self._sample(logits[:, 0, :]))
+            pos += 1
+            for s, r in enumerate(wave):
+                if not active[s]:
+                    continue
+                r.out.append(int(cur[s]))
+                if len(r.out) >= r.max_new_tokens:
+                    r.done = True
+                    active[s] = False
+        for r in wave:
+            r.done = True
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        queue = list(requests)
+        while queue:
+            wave, queue = queue[:self.batch], queue[self.batch:]
+            self._run_wave(wave)
+        return requests

@@ -1,0 +1,1 @@
+from repro.training.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,118 @@
+"""Fault-tolerant LM trainer.
+
+Responsibilities:
+- builds the pjit train step from ``distributed.steps`` against any mesh
+  (elastic: restart on a different mesh shape re-lowers automatically);
+- checkpoint/restart: atomic periodic checkpoints + resume-from-latest; a
+  SIGTERM triggers one final checkpoint before exit (preemption-safe);
+- straggler posture: the input pipeline is pull-based (any iterator), steps
+  are dispatched asynchronously (JAX async dispatch) and the loss is only
+  synced every ``log_every`` steps, so a slow host does not serialize the
+  whole fleet on every step; checkpoint writes happen off the critical path
+  (device→host copy only at save steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Callable, Iterator
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import ef_init
+from repro.distributed.steps import build_train_step
+from repro.models import lm
+from repro.optim import AdamConfig, adam_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    microbatches: int = 1
+    remat: bool = False
+    compress_grads: bool = False
+    zero1: bool = True
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, opt: AdamConfig,
+                 tcfg: TrainerConfig):
+        self.cfg, self.mesh, self.opt, self.tcfg = cfg, mesh, opt, tcfg
+        self.manager = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep)
+        self._jit_builder, self.p_specs, self.o_specs = build_train_step(
+            cfg, mesh, opt, microbatches=tcfg.microbatches, remat=tcfg.remat,
+            compress_grads=tcfg.compress_grads, zero1=tcfg.zero1,
+            donate=True)
+        self._step_fn = None
+        self._interrupted = False
+
+    # -- state ---------------------------------------------------------
+
+    def init_state(self):
+        params = lm.init_params(jax.random.key(self.tcfg.seed), self.cfg)
+        opt_state = adam_init(params)
+        if self.tcfg.compress_grads:
+            opt_state["ef_err"] = ef_init(params)
+        return params, opt_state
+
+    def restore_or_init(self):
+        params, opt_state = self.init_state()
+        latest = self.manager.latest_step()
+        if latest is not None:
+            params, opt_state = self.manager.restore(
+                latest, (params, opt_state))
+            return params, opt_state, latest
+        return params, opt_state, 0
+
+    # -- loop ----------------------------------------------------------
+
+    def _on_sigterm(self, *_):
+        self._interrupted = True
+
+    def fit(self, data_iter: Iterator[dict],
+            on_metrics: Callable[[int, dict], None] | None = None):
+        tcfg = self.tcfg
+        params, opt_state, start = self.restore_or_init()
+        old_handler = signal.signal(signal.SIGTERM, self._on_sigterm)
+        log_path = os.path.join(tcfg.checkpoint_dir, "metrics.jsonl")
+        step = start
+        try:
+            with self.mesh:
+                for step in range(start, tcfg.total_steps):
+                    batch = next(data_iter)
+                    if self._step_fn is None:
+                        shapes = jax.tree.map(
+                            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            batch)
+                        self._step_fn = self._jit_builder(shapes)
+                    params, opt_state, metrics = self._step_fn(
+                        params, opt_state, batch)
+                    if (step + 1) % tcfg.log_every == 0 or \
+                            step + 1 == tcfg.total_steps:
+                        loss = float(metrics["loss"])   # sync point
+                        rec = {"step": step + 1, "loss": loss,
+                               "time": time.time()}
+                        with open(log_path, "a") as f:
+                            f.write(json.dumps(rec) + "\n")
+                        if on_metrics:
+                            on_metrics(step + 1, rec)
+                    if (step + 1) % tcfg.checkpoint_every == 0:
+                        self.manager.save(step + 1, (params, opt_state))
+                    if self._interrupted:
+                        break
+        finally:
+            signal.signal(signal.SIGTERM, old_handler)
+        if self._interrupted:
+            # preemption: final durable checkpoint before exiting
+            self.manager.save(step + 1, (params, opt_state))
+        return params, opt_state

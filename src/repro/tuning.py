@@ -1,0 +1,134 @@
+"""Performance-tuning flags (the knobs the §Perf hillclimb turns).
+
+Flags are a trace-time context: the dry-run / trainer sets them around
+``.lower()``, model code reads them. Every flag set is recorded in the
+dry-run JSON so every §Perf data point is reproducible.
+
+``constrain(x, *spec)`` applies a sharding constraint IF a mesh hint is
+active and every named axis divides the corresponding dim — model code stays
+mesh-agnostic and single-device tests are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneFlags:
+    # remat policy for the per-layer checkpoint in scan-over-blocks:
+    #   "full" — recompute everything (paper-era default, lowest memory)
+    #   "dots" — save matmul outputs, recompute elementwise (less recompute)
+    #   "none" — no remat (XLA saves all residuals)
+    remat_policy: str = "full"
+    # chunked-attention block sizes (VMEM working-set knobs).
+    # DEFAULTS are the §Perf-optimized configuration; the paper-faithful
+    # baselines are reproducible with --tune (see EXPERIMENTS.md §Perf).
+    q_block: int = 1024
+    kv_block: int = 1024
+    # MoE dispatch: "grouped" (per-sequence local dispatch, vmap-batched
+    # scatter — optimized default) | "scatter" (global at[].add baseline) |
+    # "sharded_scatter" (refuted §Perf iteration, kept for reproduction)
+    moe_dispatch: str = "grouped"
+    # decode: sequence-parallel KV attention constraints (§Perf: 1800× less
+    # decode collective traffic)
+    constrain_decode: bool = True
+    # attention implementation: "xla_packed" (triangle-packed blocked
+    # attention — optimized default) | "xla_chunked" (plain blocked scan) |
+    # "pallas" (flash kernel; interpret=True on CPU — tests/benches only)
+    attention_impl: str = "xla_packed"
+    # MoE capacity factor
+    capacity_factor: float = 1.25
+    # FSDP/ZeRO-3: additionally shard PARAMS over the data axis (all-gather
+    # at use); required to fit ≥100B-param models on 256 chips
+    fsdp: bool = False
+    # Mamba2 SSD: blocked (chunked) evaluation of the selective scan —
+    # intra-chunk MXU matmuls + inter-chunk state carry; 0 = sequential scan
+    mamba_chunk: int = 0
+
+
+_FLAGS: contextvars.ContextVar[TuneFlags] = contextvars.ContextVar(
+    "tune_flags", default=TuneFlags())
+_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "mesh_hint", default=None)
+
+
+def flags() -> TuneFlags:
+    return _FLAGS.get()
+
+
+@contextlib.contextmanager
+def use_flags(**kw):
+    tok = _FLAGS.set(dataclasses.replace(_FLAGS.get(), **kw))
+    try:
+        yield _FLAGS.get()
+    finally:
+        _FLAGS.reset(tok)
+
+
+@contextlib.contextmanager
+def use_mesh_hint(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def axis_size(name: str):
+    """Size of a hinted mesh axis, or None outside a mesh-hint context."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name)
+
+
+def constrain(x: jax.Array, *spec):
+    """Best-effort sharding constraint: no mesh hint or non-divisible dims →
+    identity. spec entries: None | axis-name | tuple of axis-names."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = list(spec) + [None] * (x.ndim - len(spec))
+    clean = []
+    for dim, part in zip(x.shape, parts):
+        if part is None:
+            clean.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        axes = tuple(a for a in axes if a in sizes)
+        k = 1
+        for a in axes:
+            k *= sizes[a]
+        if axes and dim % k == 0:
+            clean.append(axes if len(axes) > 1 else axes[0])
+        else:
+            clean.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))
+
+
+def parse_tune_args(pairs: list[str]) -> dict:
+    """--tune key=value CLI helper."""
+    out = {}
+    fields = {f.name: f.type for f in dataclasses.fields(TuneFlags)}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        if k not in fields:
+            raise KeyError(f"unknown tune flag {k}; known: {list(fields)}")
+        t = fields[k]
+        if t in ("int", int):
+            out[k] = int(v)
+        elif t in ("float", float):
+            out[k] = float(v)
+        elif t in ("bool", bool):
+            out[k] = v.lower() in ("1", "true", "yes")
+        else:
+            out[k] = v
+    return out

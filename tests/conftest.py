@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on ONE CPU device (the dry-run overrides this in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

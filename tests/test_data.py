@@ -1,0 +1,44 @@
+"""Data pipelines: determinism, resume, shard disjointness, learnability."""
+import numpy as np
+
+from repro.data.graphs import GraphDatasetSpec, batches, generate
+from repro.data.tokens import TokenStreamSpec, make_batch, token_stream
+
+
+def test_token_batches_deterministic_and_resumable():
+    spec = TokenStreamSpec(vocab=128, batch=4, seq_len=32, seed=3)
+    a = make_batch(spec, step=7)
+    b = make_batch(spec, step=7)
+    np.testing.assert_array_equal(a, b)
+    # streaming from step 7 yields exactly batch 7 (restart == resume)
+    it = token_stream(spec, start_step=7)
+    np.testing.assert_array_equal(np.asarray(next(it)["tokens"]), a)
+
+
+def test_token_shards_disjoint():
+    s0 = TokenStreamSpec(vocab=128, batch=4, seq_len=32, shard=0,
+                         num_shards=2)
+    s1 = TokenStreamSpec(vocab=128, batch=4, seq_len=32, shard=1,
+                         num_shards=2)
+    assert not np.array_equal(make_batch(s0, 0), make_batch(s1, 0))
+
+
+def test_token_stream_has_structure():
+    """Bigram structure: successor entropy must be far below uniform."""
+    spec = TokenStreamSpec(vocab=64, batch=16, seq_len=128, noise=0.0)
+    toks = make_batch(spec, 0)
+    # every (prev → next) transition must come from ≤ branch successors
+    succ = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+    assert max(len(v) for v in succ.values()) <= spec.branch
+
+
+def test_graph_batches_fixed_shapes():
+    spec = GraphDatasetSpec.tox21_like(n_samples=64)
+    data = generate(spec)
+    shapes = set()
+    for b in batches(data, spec, 16):
+        shapes.add((b["x"].shape, b["adj"][0].row_ids.shape))
+    assert len(shapes) == 1, shapes   # single compiled step per epoch

@@ -1,0 +1,205 @@
+"""Distribution tests in an 8-device subprocess (the main test process keeps
+1 CPU device; XLA locks the device count at first init)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+import jax
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, n_dev: int = 8, timeout: int = 600):
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}",
+           "JAX_PLATFORMS": "cpu"}
+    return subprocess.run([sys.executable, "-c", script, SRC],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+_HEADER = r"""
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch.mesh import make_mesh
+from repro.distributed.steps import build_train_step
+from repro.distributed.compression import ef_init
+from repro.models import lm
+from repro.optim import AdamConfig, adam_init
+cfg = configs.get("llama3-8b").reduced()
+def data(k, b=8, t=16):
+    return {"tokens": jax.random.randint(jax.random.key(k), (b, t), 0,
+                                         cfg.vocab)}
+def make_state():
+    params = lm.init_params(jax.random.key(0), cfg)
+    return params, adam_init(params)
+"""
+
+
+def test_dp_tp_matches_single_device():
+    """Loss trajectory on a 2×4 (data×model) mesh == single-device: sharding
+    must not change numerics."""
+    script = _HEADER + r"""
+losses = {}
+for shape in [(1, 1), (2, 4)]:
+    mesh = make_mesh(shape, ("data", "model"))
+    builder, _, _ = build_train_step(cfg, mesh, AdamConfig(lr=1e-2),
+                                     microbatches=2, remat=False,
+                                     zero1=True, donate=False)
+    params, opt = make_state()
+    batch = data(1)
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          batch)
+    with mesh:
+        step = builder(shapes)
+        ls = []
+        for i in range(6):
+            # repeat one batch: loss decrease is then deterministic
+            params, opt, m = step(params, opt, data(0))
+            ls.append(float(m["loss"]))
+    losses[shape] = ls
+print("L11", losses[(1, 1)])
+print("L24", losses[(2, 4)])
+diff = max(abs(a - b) for a, b in zip(losses[(1, 1)], losses[(2, 4)]))
+print("MAXDIFF", diff)
+assert diff < 2e-2, diff
+assert losses[(1, 1)][-1] < losses[(1, 1)][0] - 0.5
+print("PASS")
+"""
+    r = _run(script)
+    assert "PASS" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+def test_zero1_shards_optimizer_state():
+    script = _HEADER + r"""
+from repro.distributed import sharding
+mesh = make_mesh((4, 2), ("data", "model"))
+p_shape = jax.eval_shape(lambda: lm.init_params(jax.random.key(0), cfg))
+p_specs = sharding.param_specs(p_shape, mesh)
+z_specs = sharding.zero1_specs(p_specs, p_shape, mesh)
+n_extra = sum(
+    1 for a, b in zip(jax.tree.leaves(p_specs), jax.tree.leaves(z_specs))
+    if a != b)
+assert n_extra > 0, "ZeRO-1 sharded nothing"
+# every zero1 spec stays valid (divisible)
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+for spec, leaf in zip(jax.tree.leaves(z_specs), jax.tree.leaves(p_shape)):
+    for dim, part in zip(leaf.shape, tuple(spec) + (None,) * 8):
+        if part is not None:
+            axes = part if isinstance(part, tuple) else (part,)
+            k = int(np.prod([sizes[a] for a in axes]))
+            assert dim % k == 0, (spec, leaf.shape)
+print("PASS")
+"""
+    r = _run(script)
+    assert "PASS" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+def test_gradient_compression_converges():
+    """int8 EF compression: training still converges and parameters stay
+    close to the uncompressed run."""
+    script = _HEADER + r"""
+mesh = make_mesh((2, 1), ("data", "model"))
+results = {}
+for compress in (False, True):
+    builder, _, _ = build_train_step(cfg, mesh, AdamConfig(lr=1e-2),
+                                     microbatches=1, remat=False,
+                                     compress_grads=compress, donate=False)
+    params, opt = make_state()
+    if compress:
+        opt["ef_err"] = ef_init(params)
+    batch = data(0)
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          batch)
+    with mesh:
+        step = builder(shapes)
+        for i in range(6):
+            params, opt, m = step(params, opt, data(i))
+        results[compress] = float(m["loss"])
+print("LOSSES", results)
+assert results[True] < 6.0          # still learning (init ~ ln(256)=5.5)
+assert abs(results[True] - results[False]) < 0.3
+print("PASS")
+"""
+    r = _run(script)
+    assert "PASS" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+def test_elastic_restart_smaller_mesh(tmp_path):
+    """Checkpoint on an 8-device mesh, restore + continue on 4 devices: the
+    sharding rules are mesh-parametric, so re-lowering just works."""
+    common = _HEADER + r"""
+from repro.checkpoint import save_pytree, load_pytree
+import os
+ckdir = sys.argv[2]
+shape = tuple(int(x) for x in sys.argv[3].split(","))
+mesh = make_mesh(shape, ("data", "model"))
+builder, _, _ = build_train_step(cfg, mesh, AdamConfig(lr=1e-2),
+                                 microbatches=1, remat=False, donate=False)
+params, opt = make_state()
+if os.path.exists(os.path.join(ckdir, "manifest.json")):
+    params, opt = load_pytree((params, opt), ckdir)
+    print("RESTORED")
+batch = data(0)
+shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+with mesh:
+    step = builder(shapes)
+    for i in range(3):
+        params, opt, m = step(params, opt, data(i))
+save_pytree((params, opt), ckdir)
+print("LOSS", float(m["loss"]))
+print("PASS")
+"""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    ck = str(tmp_path / "ck")
+
+    def run(n_dev, shape):
+        e = {**env,
+             "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}"}
+        return subprocess.run(
+            [sys.executable, "-c", common, SRC, ck, shape],
+            capture_output=True, text=True, env=e, timeout=600)
+
+    r1 = run(8, "2,4")
+    assert "PASS" in r1.stdout, r1.stdout + r1.stderr
+    r2 = run(4, "2,2")     # shrink the fleet; resume from the 8-dev ckpt
+    assert "RESTORED" in r2.stdout and "PASS" in r2.stdout, \
+        r2.stdout + r2.stderr
+    loss2 = float(r2.stdout.split("LOSS")[1].split()[0])
+    assert loss2 < 5.7      # continued training, not re-init
+
+
+def test_pipeline_parallel_matches_single_device():
+    """GPipe pipeline over 4 stages: loss (and its gradient) match the
+    non-pipelined reference loss on identical params/batch."""
+    script = _HEADER + r"""
+import dataclasses
+from repro.distributed.pipeline import build_pp_loss, pipeline_bubble_fraction
+cfg0 = configs.get("llama3-8b").reduced()
+cfg2 = dataclasses.replace(cfg0, n_layers=4, dtype="float32")
+mesh = make_mesh((4,), ("pipe",))
+params = lm.init_params(jax.random.key(0), cfg2)
+mb, b, t = 4, 2, 16
+tokens = jax.random.randint(jax.random.key(1), (mb * b, t), 0, cfg2.vocab)
+pp_loss = build_pp_loss(cfg2, mesh, microbatches=mb)
+with mesh:
+    lp = float(jax.jit(pp_loss)(params, {"tokens": tokens}))
+# reference: plain loss over the same tokens (aux-free: dense arch)
+lr = float(lm.loss_fn(params, cfg2, {"tokens": tokens})[0])
+print("PP", lp, "REF", lr)
+assert abs(lp - lr) < 2e-3, (lp, lr)
+# gradients flow through the pipeline (ppermute VJP)
+with mesh:
+    g = jax.jit(jax.grad(lambda p: pp_loss(p, {"tokens": tokens})))(params)
+gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+assert gn > 0
+assert pipeline_bubble_fraction(4, 4) == 3 / 7
+print("PASS")
+"""
+    r = _run(script, n_dev=4)
+    assert "PASS" in r.stdout, r.stdout + "\n" + r.stderr

@@ -1,0 +1,120 @@
+"""Format conversions + hypothesis property tests on SpMM invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    coo_from_lists,
+    coo_to_csr,
+    coo_to_dense,
+    coo_to_ell,
+    random_batch,
+)
+from repro.core.spmm import batched_spmm
+from repro.kernels import ref
+
+
+def _random_coo(seed, batch, dim, nnz):
+    rng = np.random.default_rng(seed)
+    return random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+
+
+def test_csr_roundtrip():
+    coo, m_pad = _random_coo(0, 5, (5, 30), (1, 4))
+    csr = coo_to_csr(coo, m_pad)
+    # rpt is monotone, ends at true nnz
+    rpt = np.asarray(csr.rpt)
+    assert (np.diff(rpt, axis=1) >= 0).all()
+    np.testing.assert_array_equal(rpt[:, -1], np.asarray(coo.nnz))
+    b = jnp.asarray(np.random.default_rng(1).normal(size=(5, m_pad, 16)),
+                    jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.batched_spmm_csr_ref(csr, b)),
+        np.asarray(ref.batched_spmm_coo_ref(coo, b, m_pad)), atol=1e-5)
+
+
+def test_ell_matches_dense():
+    coo, m_pad = _random_coo(2, 4, (5, 20), (1, 3))
+    ell = coo_to_ell(coo, m_pad, k_pad=8)
+    dense_from_ell = np.zeros((4, m_pad, m_pad), np.float32)
+    cid = np.asarray(ell.col_ids)
+    val = np.asarray(ell.values)
+    for b in range(4):
+        for r in range(m_pad):
+            for k in range(8):
+                dense_from_ell[b, r, cid[b, r, k]] += val[b, r, k]
+    np.testing.assert_allclose(dense_from_ell,
+                               np.asarray(coo_to_dense(coo, m_pad)), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def coo_batches(draw):
+    batch = draw(st.integers(1, 5))
+    dim_hi = draw(st.integers(4, 40))
+    nnz_hi = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**16))
+    n_b = draw(st.sampled_from([1, 4, 16, 40, 130]))
+    coo, m_pad = _random_coo(seed, batch, (3, dim_hi), (1, nnz_hi))
+    b = jnp.asarray(
+        np.random.default_rng(seed + 1).normal(size=(batch, m_pad, n_b)),
+        jnp.float32)
+    return coo, m_pad, b
+
+
+@settings(max_examples=20, deadline=None)
+@given(coo_batches())
+def test_property_impls_equal_dense(case):
+    """∀ batches: every impl == densify+matmul oracle."""
+    coo, m_pad, b = case
+    want = np.asarray(jax.lax.batch_matmul(coo_to_dense(coo, m_pad), b))
+    for impl in ("ref", "pallas_coo", "pallas_ell"):
+        got = np.asarray(batched_spmm(coo, b, impl=impl, k_pad=8))
+        np.testing.assert_allclose(got, want, atol=1e-4, err_msg=impl)
+
+
+@settings(max_examples=15, deadline=None)
+@given(coo_batches(), st.floats(-3, 3), st.floats(-3, 3))
+def test_property_linearity(case, alpha, beta):
+    """SpMM is linear in B: A(αB₁+βB₂) = αAB₁ + βAB₂."""
+    coo, m_pad, b = case
+    b2 = b[:, ::-1, :]
+    lhs = batched_spmm(coo, alpha * b + beta * b2, impl="ref")
+    rhs = (alpha * batched_spmm(coo, b, impl="ref")
+           + beta * batched_spmm(coo, b2, impl="ref"))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-3, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(coo_batches(), st.integers(1, 64))
+def test_property_padding_invariance(case, extra):
+    """Adding zero-valued padding slots never changes the product (the
+    paper's §IV-C 'redundant threads terminate immediately' invariant)."""
+    coo, m_pad, b = case
+    pad = lambda x: jnp.pad(x, ((0, 0), (0, extra)))
+    coo2 = dataclasses.replace(
+        coo, row_ids=pad(coo.row_ids), col_ids=pad(coo.col_ids),
+        values=pad(coo.values))
+    got = batched_spmm(coo2, b, impl="ref")
+    want = batched_spmm(coo, b, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(coo_batches())
+def test_property_batch_independence(case):
+    """Batching never mixes samples: batched result row b == single-sample
+    result for sample b (the core correctness claim of Batched SpMM)."""
+    coo, m_pad, b = case
+    full = np.asarray(batched_spmm(coo, b, impl="ref"))
+    for s in range(min(coo.batch, 3)):
+        single = ref.spmm_coo_single(
+            coo.row_ids[s], coo.col_ids[s], coo.values[s], b[s], m_pad)
+        np.testing.assert_allclose(full[s], np.asarray(single), atol=1e-5)

@@ -1,0 +1,230 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret=True) against
+the pure-jnp oracle in kernels/ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batching, coo_to_csr, coo_to_dense, coo_to_ell, random_batch
+from repro.core.spmm import batched_spmm
+from repro.kernels import ref
+from repro.kernels.batched_gemm import batched_gemm
+from repro.kernels.batched_spmm_coo import batched_spmm_coo
+from repro.kernels.batched_spmm_ell import batched_spmm_ell
+
+
+def _case(seed, batch, dim, nnz, n_b, dtype):
+    rng = np.random.default_rng(seed)
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz,
+                              dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), dtype)
+    dense = coo_to_dense(coo, m_pad)
+    want = jax.lax.batch_matmul(dense.astype(jnp.float32),
+                                b.astype(jnp.float32))
+    return coo, m_pad, b, want
+
+
+TOLS = {jnp.float32: 1e-5, jnp.bfloat16: 8e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("batch,dim,nnz,n_b", [
+    (4, 32, 1, 8),        # tiny
+    (8, (20, 50), (1, 5), 64),   # paper's GCN regime (mixed sizes, Fig. 10)
+    (4, 64, 5, 128),      # one full lane tile
+    (2, 128, 3, 300),     # non-multiple-of-128 columns (padding path)
+    (3, (8, 40), (1, 8), 520),   # forces cache blocking (p > 1)
+])
+def test_spmm_ell_vs_oracle(batch, dim, nnz, n_b, dtype):
+    coo, m_pad, b, want = _case(0, batch, dim, nnz, n_b, dtype)
+    k_pad = 16
+    ell = coo_to_ell(coo, m_pad, k_pad)
+    plan = batching.plan_batched_spmm(batch=batch, m_pad=m_pad, n_b=n_b,
+                                      slots=k_pad, itemsize=b.dtype.itemsize)
+    got = batched_spmm_ell(ell.col_ids, ell.values, b, plan=plan)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               atol=TOLS[dtype] * max(1, nnz if isinstance(nnz, int) else nnz[1]),
+                               rtol=TOLS[dtype])
+    # oracle self-check: ELL ref == COO ref
+    got_ref = ref.batched_spmm_ell_ref(ell, b)
+    np.testing.assert_allclose(np.asarray(got_ref, np.float32), want,
+                               atol=TOLS[dtype] * 8, rtol=TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("batch,dim,nnz,n_b", [
+    (4, 32, 1, 8),
+    (8, (20, 50), (1, 5), 64),
+    (2, 128, 3, 300),
+    (3, (8, 40), (1, 8), 520),
+])
+def test_spmm_coo_vs_oracle(batch, dim, nnz, n_b, dtype):
+    coo, m_pad, b, want = _case(1, batch, dim, nnz, n_b, dtype)
+    plan = batching.plan_batched_spmm(batch=batch, m_pad=m_pad, n_b=n_b,
+                                      slots=coo.nnz_pad,
+                                      itemsize=b.dtype.itemsize)
+    got = batched_spmm_coo(coo.row_ids, coo.col_ids, coo.values, b, plan=plan)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               atol=TOLS[dtype] * 8, rtol=TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("batch,m,k,n", [
+    (4, 16, 16, 16), (2, 64, 32, 128), (3, 40, 24, 260), (1, 128, 128, 512),
+])
+def test_batched_gemm_vs_oracle(batch, m, k, n, dtype):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(batch, m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(batch, k, n)), dtype)
+    plan = batching.plan_batched_gemm(batch=batch, m=m, n=n, k=k,
+                                      itemsize=b.dtype.itemsize)
+    got = batched_gemm(a, b, plan=plan)
+    want = ref.batched_gemm_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               atol=TOLS[dtype] * k, rtol=TOLS[dtype] * 4)
+
+
+def test_all_impls_agree():
+    coo, m_pad, b, want = _case(3, 6, (10, 60), (1, 5), 96, jnp.float32)
+    outs = {}
+    for impl in ("ref", "loop", "dense", "pallas_gemm", "pallas_coo",
+                 "pallas_ell"):
+        outs[impl] = np.asarray(
+            batched_spmm(coo, b, impl=impl, k_pad=16))
+    for impl, got in outs.items():
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5,
+                                   err_msg=impl)
+
+
+def test_vjp_matches_ref():
+    coo, m_pad, b, _ = _case(4, 4, (10, 30), (1, 4), 32, jnp.float32)
+
+    def make_loss(impl):
+        def loss(values, bb):
+            import dataclasses
+            c = batched_spmm(dataclasses.replace(coo, values=values), bb,
+                             impl=impl, k_pad=8)
+            return jnp.sum(jnp.tanh(c))
+        return loss
+
+    g_ref = jax.grad(make_loss("ref"), argnums=(0, 1))(coo.values, b)
+    for impl in ("pallas_ell", "pallas_coo", "dense"):
+        g = jax.grad(make_loss(impl), argnums=(0, 1))(coo.values, b)
+        np.testing.assert_allclose(np.asarray(g[0]), np.asarray(g_ref[0]),
+                                   atol=1e-4, err_msg=f"{impl} dvalues")
+        np.testing.assert_allclose(np.asarray(g[1]), np.asarray(g_ref[1]),
+                                   atol=1e-4, err_msg=f"{impl} db")
+
+
+def test_planner_cases():
+    # paper Fig. 5 case analysis with TPU constants
+    p1 = batching.plan_batched_spmm(batch=10, m_pad=64, n_b=64, slots=8)
+    assert p1.case == 1 and p1.p == 1
+    p2 = batching.plan_batched_spmm(batch=10, m_pad=2048, n_b=4096, slots=8)
+    assert p2.case == 2 and p2.p > 1
+    assert p2.n_block % batching.LANES == 0
+    assert 2 * p2.m_pad * p2.n_block * 4 <= batching.VMEM_TILE_BUDGET * 1.01
+    p3 = batching.plan_batched_spmm(batch=2, m_pad=10000, n_b=64, slots=8)
+    assert p3.case == 3   # paper: m_A > 8192 → don't batch
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel (interpret mode) vs jnp oracle
+# ---------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal, window):
+    b, tq, h, hd = q.shape
+    groups = h // k.shape[2]
+    k = jnp.repeat(k, groups, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v, groups, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) * hd ** -0.5
+    qpos = jnp.arange(tq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((tq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,kv,hd,causal,window,qb,kvb", [
+    (2, 64, 4, 4, 32, True, 0, 32, 32),      # MHA causal
+    (1, 128, 8, 2, 16, True, 0, 64, 32),     # GQA (index-map kv selection)
+    (2, 96, 4, 1, 32, True, 0, 32, 32),      # MQA + non-multiple seq
+    (1, 128, 4, 4, 32, True, 48, 32, 32),    # sliding window
+    (2, 64, 4, 2, 32, False, 0, 64, 64),     # bidirectional (encoder)
+])
+def test_flash_attention_vs_oracle(b, t, h, kv, hd, causal, window, qb, kvb,
+                                   dtype):
+    from repro.kernels.flash_attention import flash_attention
+
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(b, t, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=qb, kv_block=kvb)
+    want = _naive_attention(q, k, v, causal, window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_chunked():
+    """Both attention impls (XLA-chunked baseline, Pallas flash) agree —
+    the §Perf substitution changes traffic, not numerics."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import chunked_attention
+
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(2, 80, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 80, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 80, 4, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    c = chunked_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Grouped ragged matmul (MoE expert GEMM) vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,e,tm,seed", [
+    (256, 32, 64, 4, 64, 0),       # aligned boundaries
+    (200, 16, 48, 3, 64, 1),       # ragged + padding rows
+    (128, 32, 200, 8, 32, 2),      # many groups, non-128 N
+    (64, 8, 16, 2, 64, 3),         # one tile, boundary inside the tile
+])
+def test_grouped_matmul_vs_oracle(m, k, n, e, tm, seed, dtype):
+    from repro.kernels.grouped_matmul import grouped_matmul, sort_by_group
+    from repro.kernels.ref import grouped_matmul_ref
+
+    rng = np.random.default_rng(seed)
+    # random ragged sizes summing to m
+    cuts = np.sort(rng.choice(np.arange(1, m), size=e - 1, replace=False))
+    sizes = np.diff(np.concatenate([[0], cuts, [m]])).astype(np.int32)
+    eids = jnp.asarray(np.repeat(np.arange(e), sizes), jnp.int32)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    got = grouped_matmul(x, w, jnp.asarray(sizes), tm=tm, tn=128,
+                         max_groups_per_tile=e)
+    want = grouped_matmul_ref(x.astype(jnp.float32), eids,
+                              w.astype(jnp.float32))
+    tol = 1e-4 * k if dtype == jnp.float32 else 0.15 * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=tol, rtol=1e-2)
+
+
+def test_sort_by_group_roundtrip():
+    from repro.kernels.grouped_matmul import sort_by_group
+
+    eids = jnp.asarray([2, 0, 1, 0, 2, 1, 1], jnp.int32)
+    order, sizes = sort_by_group(eids, 3)
+    np.testing.assert_array_equal(np.asarray(sizes), [2, 3, 2])
+    assert (np.diff(np.asarray(eids)[np.asarray(order)]) >= 0).all()

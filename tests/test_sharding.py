@@ -1,0 +1,98 @@
+"""Sharding rules: validity (divisibility, no axis reuse) for every arch on
+the production mesh geometry — no devices needed, rules only read axis sizes."""
+import types
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.distributed import sharding
+from repro.distributed.steps import shaped_params
+
+MESH16 = types.SimpleNamespace(axis_names=("data", "model"),
+                               devices=np.empty((16, 16)))
+MESH_POD = types.SimpleNamespace(axis_names=("pod", "data", "model"),
+                                 devices=np.empty((2, 16, 16)))
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_specs(p_shape, specs):
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(p_shape)[0],
+            jax.tree.leaves(specs)):
+        parts = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        used = []
+        for dim, part in zip(leaf.shape, parts):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            k = int(np.prod([SIZES[a] for a in axes]))
+            assert dim % k == 0, (path, leaf.shape, spec)
+            used.extend(axes)
+        assert len(used) == len(set(used)), f"axis reused: {path} {spec}"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("mesh", [MESH16, MESH_POD])
+def test_param_specs_valid(arch, mesh):
+    p_shape = shaped_params(configs.get(arch))
+    specs = sharding.param_specs(p_shape, mesh)
+    _check_specs(p_shape, specs)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_zero1_and_fsdp_specs_valid(arch):
+    p_shape = shaped_params(configs.get(arch))
+    specs = sharding.param_specs(p_shape, MESH16)
+    fsdp = sharding.zero1_specs(specs, p_shape, MESH16)
+    _check_specs(p_shape, fsdp)
+    # stacking zero1 on fsdp must not reuse "data" (the wave-5 regression)
+    z = sharding.zero1_specs(fsdp, p_shape, MESH16)
+    _check_specs(p_shape, z)
+
+
+def test_moe_expert_rule_e_else_f():
+    """mixtral (E=8 < 16) → TP-in-expert on d_ff; llama4 (E=128) → EP."""
+    mix = shaped_params(configs.get("mixtral-8x22b"))
+    specs = sharding.param_specs(mix, MESH16)
+    wg = specs["blocks"]["0_attn_moe"]["moe"]["w_gate"]
+    assert tuple(wg) == (None, None, None, "model"), wg     # F-sharded
+    ll = shaped_params(configs.get("llama4-maverick-400b-a17b"))
+    specs = sharding.param_specs(ll, MESH16)
+    wg = specs["blocks"]["1_attn_moe"]["moe"]["w_gate"]
+    assert tuple(wg) == (None, "model", None, None), wg     # E-sharded
+
+
+def test_whisper_vocab_fallback():
+    """51,865 vocab is not 16-divisible → embed shards d_model instead."""
+    p = shaped_params(configs.get("whisper-small"))
+    specs = sharding.param_specs(p, MESH16)
+    emb = tuple(specs["embed"])
+    assert emb[0] is None and emb[1] == "model", emb
+
+
+def test_no_replicated_big_leaves():
+    """No parameter leaf > 64 MB may end up fully replicated (memory fit)."""
+    for arch in configs.ARCHS:
+        p_shape = shaped_params(configs.get(arch))
+        specs = sharding.param_specs(p_shape, MESH16)
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(p_shape)[0],
+                jax.tree.leaves(specs)):
+            if all(x is None for x in tuple(spec)):
+                nbytes = int(np.prod(leaf.shape)) * 2
+                assert nbytes < 64 * 2**20, (arch, path, leaf.shape)
+
+
+def test_cache_specs_sequence_parallel():
+    import jax.numpy as jnp
+    from repro.models import lm
+
+    cfg = configs.get("llama3-8b")
+    caches = jax.eval_shape(lambda: lm.init_decode_state(cfg, 128, 32768))
+    specs = sharding.cache_specs(caches, MESH16)
+    k_spec = tuple(specs["0"]["k"])
+    # (n_blocks, B, S, KV, hd): batch→data, S→model
+    assert k_spec[1] == ("data",) or k_spec[1] == "data", k_spec
+    assert k_spec[2] == "model", k_spec

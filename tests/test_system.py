@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the paper's system (ChemGCN + Batched SpMM)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.formats import BatchedCOO
+from repro.core.gcn import GCNConfig, apply_gcn, gcn_loss, init_gcn
+from repro.data.graphs import GraphDatasetSpec, batches, generate
+from repro.optim import AdamConfig, adam_init, adam_update
+
+
+@pytest.fixture(scope="module")
+def tox21_like():
+    spec = GraphDatasetSpec.tox21_like(n_samples=160)
+    return spec, generate(spec)
+
+
+def _train(cfg, spec, data, steps_epochs=4, lr=3e-3, batch=32):
+    params = init_gcn(jax.random.key(0), cfg)
+    opt = AdamConfig(lr=lr)
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, adj_arrays, x, n_nodes, labels):
+        adj = [BatchedCOO(*a) for a in adj_arrays]
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: gcn_loss(p, cfg, adj, x, n_nodes, labels),
+            has_aux=True)(params)
+        params, state = adam_update(opt, params, grads, state)
+        return params, state, loss, acc
+
+    losses = []
+    for epoch in range(steps_epochs):
+        for b in batches(data, spec, batch, seed=epoch):
+            adj_arrays = [(a.row_ids, a.col_ids, a.values, a.nnz, a.n_rows)
+                          for a in b["adj"]]
+            params, state, loss, acc = step(
+                params, state, adj_arrays, b["x"], b["n_nodes"], b["labels"])
+        losses.append(float(loss))
+    return params, losses, float(acc)
+
+
+def test_chemgcn_trains(tox21_like):
+    """Training on teacher-labeled molecular graphs: loss decreases, accuracy
+    beats chance — proves the whole substrate (data → conv → loss → Adam)."""
+    spec, data = tox21_like
+    _, losses, acc = _train(GCNConfig.tox21(impl="ref"), spec, data)
+    assert losses[-1] < 0.6 * losses[0], losses
+    assert acc > 0.7
+
+
+def test_batched_equals_nonbatched_full_model(tox21_like):
+    """Paper's central numerics claim: the Fig. 7 batched restructuring does
+    not change the model output vs the Fig. 6 per-sample loop."""
+    spec, data = tox21_like
+    cfg = GCNConfig.tox21(impl="ref")
+    params = init_gcn(jax.random.key(1), cfg)
+    b = next(batches(data, spec, 16))
+    y_batched = apply_gcn(params, cfg, b["adj"], b["x"], b["n_nodes"])
+    y_loop = apply_gcn(params, dataclasses.replace(cfg, batched=False),
+                       b["adj"], b["x"], b["n_nodes"])
+    np.testing.assert_allclose(np.asarray(y_batched), np.asarray(y_loop),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_pallas_impl_trains_identically(tox21_like):
+    """Swapping the SpMM kernel (ref → Pallas ELL) must not change training:
+    same losses step for step (within float tolerance)."""
+    spec, data = tox21_like
+    _, losses_ref, _ = _train(GCNConfig.tox21(impl="ref"), spec, data,
+                              steps_epochs=2)
+    _, losses_ell, _ = _train(GCNConfig.tox21(impl="pallas_ell"), spec, data,
+                              steps_epochs=2)
+    np.testing.assert_allclose(losses_ref, losses_ell, rtol=2e-3)
+
+
+def test_reaction100_multiclass_head():
+    spec = GraphDatasetSpec.reaction100_like(n_samples=96)
+    data = generate(spec)
+    cfg = GCNConfig(conv_widths=(64, 64, 64), n_tasks=100, task="multiclass",
+                    n_features=spec.n_features)
+    _, losses, acc = _train(cfg, spec, data, steps_epochs=6, batch=24)
+    assert losses[-1] < losses[0]
+    assert acc > 0.10   # 100-way chance = 1%
