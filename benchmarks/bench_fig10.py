@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import random_batch
-from repro.core.spmm import batched_spmm
+from repro.core.spmm import batched_spmm, resolve_impl
 
 
 def main(batch=100, n_bs=(64, 256, 1024)):
@@ -22,12 +22,16 @@ def main(batch=100, n_bs=(64, 256, 1024)):
     for n_b in n_bs:
         b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
         ts = {}
-        for impl in ("loop", "ref", "dense"):
+        for impl in ("loop", "ref", "dense", "auto"):
             fn = jax.jit(functools.partial(batched_spmm, impl=impl, k_pad=8))
             t = time_fn(fn, coo, b)
             ts[impl] = t
             gflops = 2 * total_nnz * n_b / t / 1e9
-            row(f"fig10/mixed_nB{n_b}/{impl}", t * 1e6, f"{gflops:.2f}GFLOPS")
+            derived = f"{gflops:.2f}GFLOPS"
+            if impl == "auto":
+                d = resolve_impl(coo, b, k_pad=8)
+                derived += f"->{d.impl}(case{d.case})"
+            row(f"fig10/mixed_nB{n_b}/{impl}", t * 1e6, derived)
         row(f"fig10/mixed_nB{n_b}/speedup_batched_vs_nonbatched", 0.0,
             f"{ts['loop'] / ts['ref']:.2f}x")
 

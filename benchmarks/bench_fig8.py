@@ -22,10 +22,12 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import random_batch
-from repro.core.spmm import batched_spmm
+from repro.core.spmm import batched_spmm, resolve_impl
 from repro.kernels.ref import spmm_coo_single
 
-BATCHED = ("ref", "ell", "dense")
+# "auto" rides along so every figure also reports the adaptive dispatcher's
+# choice (DESIGN.md §5) next to the hand-picked impls it replaces.
+BATCHED = ("ref", "ell", "dense", "auto")
 
 
 def _dispatch_baseline(coo, b, m_pad):
@@ -62,8 +64,11 @@ def run(batch=100, dim=50, nnz=2, n_bs=(16, 64, 128, 512),
             t = time_fn(fn, coo, b)
             name = "scan" if impl == "loop" else impl
             results[(name, n_b)] = t
-            row(f"fig8/dim{dim}/nB{n_b}/{name}", t * 1e6,
-                f"{2 * total_nnz * n_b / t / 1e9:.2f}GFLOPS")
+            derived = f"{2 * total_nnz * n_b / t / 1e9:.2f}GFLOPS"
+            if impl == "auto":
+                d = resolve_impl(coo, b, k_pad=max(nnz + 2, 4))
+                derived += f"->{d.impl}(case{d.case})"
+            row(f"fig8/dim{dim}/nB{n_b}/{name}", t * 1e6, derived)
     for n_b in n_bs:
         best = min(results[(i, n_b)] for i in BATCHED)
         sp = results[("dispatch", n_b)] / best

@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import random_batch
-from repro.core.spmm import batched_spmm
+from repro.core.spmm import batched_spmm, resolve_impl
 
 
 def one(batch, dim, nnz, n_b=128):
@@ -18,13 +18,16 @@ def one(batch, dim, nnz, n_b=128):
     coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
     b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
     total_nnz = float(jnp.sum(coo.nnz))
-    for impl in ("ref", "dense", "loop"):
+    for impl in ("ref", "dense", "loop", "auto"):
         fn = jax.jit(functools.partial(batched_spmm, impl=impl,
                                        k_pad=nnz + 2))
         t = time_fn(fn, coo, b)
         gflops = 2 * total_nnz * n_b / t / 1e9
-        row(f"fig9/b{batch}_dim{dim}_nnz{nnz}/{impl}", t * 1e6,
-            f"{gflops:.2f}GFLOPS")
+        derived = f"{gflops:.2f}GFLOPS"
+        if impl == "auto":
+            d = resolve_impl(coo, b, k_pad=nnz + 2)
+            derived += f"->{d.impl}(case{d.case})"
+        row(f"fig9/b{batch}_dim{dim}_nnz{nnz}/{impl}", t * 1e6, derived)
 
 
 def main():

@@ -1,10 +1,12 @@
 """Benchmark driver: one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py for
 the CPU-timing caveat). ``--full`` uses paper-scale dataset sizes; the
-default keeps the whole suite under a few minutes.
+default keeps the whole suite under a few minutes; ``--smoke`` is the CI
+mode — tiny shapes, SpMM figures + the adaptive-dispatch decisions only,
+well under a minute on a CPU runner.
 """
 from __future__ import annotations
 
@@ -15,33 +17,67 @@ import traceback
 from benchmarks.common import header
 
 
+def _smoke_suites():
+    from benchmarks import bench_fig8, bench_fig9, bench_fig10
+
+    def decisions():
+        """Print the impl="auto" decision for the acceptance regimes."""
+        from benchmarks.common import row
+        from repro.autotune import Workload, select_impl
+
+        probes = {
+            "small_dense": Workload(batch=20, m_pad=56, nnz_pad=512,
+                                    k_pad=16, n_b=64),
+            "large_m": Workload(batch=2, m_pad=9000, nnz_pad=36000,
+                                k_pad=4, n_b=64),
+            "col_paneled": Workload(batch=20, m_pad=2048, nnz_pad=8192,
+                                    k_pad=4, n_b=512),
+        }
+        for name, w in probes.items():
+            d = select_impl(w, allow_pallas=False)
+            row(f"auto/{name}", 0.0, f"{d.impl}(case{d.case},{d.source})")
+
+    return [
+        ("fig8", lambda: bench_fig8.run(batch=20, dim=20, nnz=2,
+                                        n_bs=(16, 64))),
+        ("fig9", lambda: bench_fig9.one(20, 32, 2, n_b=64)),
+        ("fig10", lambda: bench_fig10.main(batch=20, n_bs=(64,))),
+        ("auto", decisions),
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny shapes, SpMM suites only")
     args = ap.parse_args()
 
-    from benchmarks import (
-        bench_chemgcn,
-        bench_fig8,
-        bench_fig9,
-        bench_fig10,
-        bench_format,
-        bench_kernel_breakdown,
-        bench_moe,
-        bench_serve,
-    )
-
     header()
-    suites = [
-        ("fig8", lambda: bench_fig8.main()),
-        ("fig9", lambda: bench_fig9.main()),
-        ("fig10", lambda: bench_fig10.main()),
-        ("table4", lambda: bench_kernel_breakdown.main()),
-        ("format", lambda: bench_format.main()),
-        ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
-        ("moe", lambda: bench_moe.main()),
-        ("serve", lambda: bench_serve.main()),
-    ]
+    if args.smoke:
+        suites = _smoke_suites()
+    else:
+        from benchmarks import (
+            bench_chemgcn,
+            bench_fig8,
+            bench_fig9,
+            bench_fig10,
+            bench_format,
+            bench_kernel_breakdown,
+            bench_moe,
+            bench_serve,
+        )
+
+        suites = [
+            ("fig8", lambda: bench_fig8.main()),
+            ("fig9", lambda: bench_fig9.main()),
+            ("fig10", lambda: bench_fig10.main()),
+            ("table4", lambda: bench_kernel_breakdown.main()),
+            ("format", lambda: bench_format.main()),
+            ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
+            ("moe", lambda: bench_moe.main()),
+            ("serve", lambda: bench_serve.main()),
+        ]
     failed = []
     for name, fn in suites:
         try:

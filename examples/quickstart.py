@@ -13,7 +13,9 @@ from repro.optim import AdamConfig, adam_init, adam_update
 def main():
     spec = GraphDatasetSpec.tox21_like(n_samples=256)
     data = generate(spec)
-    cfg = GCNConfig.tox21(impl="ref")          # try impl="pallas_ell"
+    cfg = GCNConfig.tox21(impl="auto")         # adaptive dispatch (DESIGN.md
+                                               # §5); pin e.g. impl="pallas_ell"
+                                               # to override
     params = init_gcn(jax.random.key(0), cfg)
     opt, state = AdamConfig(lr=3e-3), None
     state = adam_init(params)

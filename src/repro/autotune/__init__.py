@@ -1,0 +1,37 @@
+"""Adaptive dispatch + autotune for Batched SpMM (DESIGN.md §5).
+
+Makes ``impl="auto"`` a first-class value in ``repro.core.spmm.batched_spmm``:
+
+- :mod:`repro.autotune.cost_model` — shape-keyed analytic ranking of the
+  implementations (roofline terms + dispatch overheads over the planner's
+  case analysis);
+- :mod:`repro.autotune.selector` — the Decision object and precedence rules
+  (case-3 force → tuning-cache winner → model winner);
+- :mod:`repro.autotune.cache` — persistent JSON cache of on-device
+  measurements ($REPRO_TUNE_CACHE), refining the model per workload key.
+"""
+from repro.autotune.cache import (  # noqa: F401
+    ENV_VAR,
+    TuningCache,
+    autotune,
+    default_cache,
+    measure_workload,
+)
+from repro.autotune.cost_model import (  # noqa: F401
+    Workload,
+    estimate,
+    rank,
+    spmm_plan,
+)
+from repro.autotune.selector import (  # noqa: F401
+    KINDS,
+    Decision,
+    resolve_auto,
+    select_impl,
+)
+
+__all__ = [
+    "ENV_VAR", "TuningCache", "autotune", "default_cache", "measure_workload",
+    "Workload", "estimate", "rank", "spmm_plan",
+    "KINDS", "Decision", "resolve_auto", "select_impl",
+]

@@ -1,0 +1,174 @@
+"""Persistent on-device tuning cache for ``impl="auto"`` (DESIGN.md §5).
+
+The analytic cost model ranks implementations from shapes alone; this module
+*refines* that ranking by measurement, the way ``repro.tuning`` records every
+dry-run flag set: each record is keyed by the workload's stable shape key and
+stores the per-impl median seconds actually observed, so every §Perf data
+point in EXPERIMENTS.md is reproducible from the cache file.
+
+The cache is a flat JSON document::
+
+    {"version": 1,
+     "records": {"b100_m64_nnz256_k8_n128_i4": {
+         "best": "ell",
+         "times": {"ell": 1.1e-4, "ref": 2.0e-4, "dense": 3.2e-4},
+         "interpret": true}}}
+
+Writes are atomic (tmp + rename). The default location comes from the
+``REPRO_TUNE_CACHE`` environment variable; unset means no persistent cache
+(selection stays purely analytic).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import tempfile
+
+from repro.autotune.cost_model import Workload, rank
+
+ENV_VAR = "REPRO_TUNE_CACHE"
+_VERSION = 1
+
+
+class TuningCache:
+    """Workload-key → measured per-impl seconds, persisted as JSON."""
+
+    def __init__(self, path: str | None):
+        self.path = path
+        self.records: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+                if doc.get("version") == _VERSION:
+                    self.records = doc.get("records", {})
+            except (json.JSONDecodeError, OSError):
+                self.records = {}
+
+    def best(self, key: str) -> str | None:
+        rec = self.records.get(key)
+        return rec.get("best") if rec else None
+
+    def times(self, key: str) -> dict[str, float]:
+        rec = self.records.get(key)
+        return dict(rec.get("times", {})) if rec else {}
+
+    def put(self, key: str, times: dict[str, float], *,
+            interpret: bool) -> str:
+        best = min(times, key=times.get)
+        self.records[key] = {"best": best, "times": times,
+                             "interpret": interpret}
+        self.save()
+        return best
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": _VERSION, "records": self.records},
+                          f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+
+
+@functools.lru_cache(maxsize=8)
+def _cache_for(path: str) -> TuningCache:
+    return TuningCache(path)
+
+
+def default_cache() -> TuningCache | None:
+    """Process-default cache, from $REPRO_TUNE_CACHE (None when unset).
+
+    Memoized per path: every ``impl="auto"`` resolution consults this, so
+    the JSON file is parsed once per process, not once per call. External
+    edits to the file during the process's lifetime are not re-read;
+    ``autotune``'s own puts update the memoized instance AND the file.
+    """
+    path = os.environ.get(ENV_VAR)
+    return _cache_for(path) if path else None
+
+
+def measure_workload(
+    w: Workload,
+    impls: tuple[str, ...] | None = None,
+    *,
+    interpret: bool = True,
+    warmup: int = 1,
+    iters: int = 5,
+    seed: int = 0,
+) -> dict[str, float]:
+    """Time each candidate impl on synthetic inputs matching ``w`` EXACTLY.
+
+    The inputs are constructed directly at the workload's static shapes —
+    (batch, nnz_pad) COO arrays, (batch, m_pad, n_b) dense operand, dtype
+    from ``itemsize`` (2 → bfloat16, else float32) — so the measured record
+    is keyed by precisely the shapes it ran, never an approximation.
+    Imports are local to avoid a cycle with ``kernels/ops.py`` (which
+    imports this package for ``impl="auto"``).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.formats import BatchedCOO
+    from repro.kernels.ops import batched_spmm
+
+    if impls is None:
+        impls = tuple(i for i, _ in rank(w, allow_pallas=not interpret))
+
+    rng = np.random.default_rng(seed)
+    dtype = jnp.bfloat16 if w.itemsize == 2 else jnp.float32
+    rid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
+    cid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
+    coo = BatchedCOO(
+        row_ids=jnp.asarray(rid), col_ids=jnp.asarray(cid),
+        values=jnp.asarray(rng.normal(size=(w.batch, w.nnz_pad)), dtype),
+        nnz=jnp.full((w.batch,), w.nnz_pad, jnp.int32),
+        n_rows=jnp.full((w.batch,), w.m_pad, jnp.int32))
+    b = jnp.asarray(rng.normal(size=(w.batch, w.m_pad, w.n_b)), dtype)
+
+    times: dict[str, float] = {}
+    for impl in impls:
+        fn = jax.jit(functools.partial(
+            batched_spmm, impl=impl, k_pad=w.k_pad, interpret=interpret))
+        try:
+            for _ in range(warmup):
+                jax.block_until_ready(fn(coo, b))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(coo, b))
+                ts.append(time.perf_counter() - t0)
+            times[impl] = float(np.median(ts))
+        except Exception:  # noqa: BLE001 — an impl a backend can't run is
+            continue       # simply absent from the record
+    return times
+
+
+def autotune(
+    w: Workload,
+    *,
+    cache: TuningCache,
+    impls: tuple[str, ...] | None = None,
+    interpret: bool = True,
+    refresh: bool = False,
+) -> str:
+    """Measured-best impl for ``w``, memoized in ``cache``."""
+    key = w.key()
+    if not refresh:
+        best = cache.best(key)
+        if best is not None:
+            return best
+    times = measure_workload(w, impls, interpret=interpret)
+    if not times:
+        raise RuntimeError(f"no candidate impl ran for workload {key}")
+    return cache.put(key, times, interpret=interpret)

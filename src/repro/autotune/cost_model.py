@@ -1,0 +1,188 @@
+"""Analytic per-implementation cost model for Batched SpMM (DESIGN.md §5).
+
+The paper's §IV-B/§IV-C resource-assignment policy decides *how* a batch is
+blocked (``repro.core.batching.BatchPlan``); this module extends that case
+analysis into a *which-kernel* decision by estimating wall time for each of
+the six implementations in ``repro.kernels.ops.IMPLS`` on a shape-keyed
+workload. The estimate is a two-term roofline (compute vs HBM traffic — the
+same hardware constants as ``repro.analysis.roofline.HW``) plus the dispatch /
+grid-step overheads that batching exists to amortize:
+
+    t(impl) = max(flops / unit_peak, bytes / hbm_bw) + overheads
+
+The model sees only static shapes — ``(batch, m_pad, nnz_pad, k_pad, n_b,
+itemsize)`` — so selection is trace-safe: ``nnz_pad`` (the padded non-zero
+slot count) stands in for density, exactly like the planner's ``slots``
+argument. Padded slots cost real bandwidth on TPU (they are multiplied by
+0.0, not skipped), so charging them is faithful, not pessimistic.
+
+Per-impl traffic/compute accounting (see each kernel's module docstring for
+the execution structure being modeled):
+
+- ``ref``      scatter-add: gathers one B row per non-zero, then a
+               segment-sum into the output; the scatter is charged a
+               read-modify-write penalty on the output.
+- ``ell``      XLA row-split: one B gather per ELL slot column, no scatter
+               (each output row is owned by one reduction).
+- ``pallas_ell``  same arithmetic, but panel-blocked: inputs are re-read once
+               per column panel and the output block stays VMEM-resident.
+- ``pallas_coo``  the one-hot MXU scatter: each CHUNK of non-zeros costs a
+               (CHUNK × m_pad)ᵀ × (CHUNK × n_block) contraction.
+- ``dense`` / ``pallas_gemm``  densify (write + read m_pad² per matrix) then
+               a batched GEMM at MXU tile efficiency.
+- ``loop``     the non-batched baseline: ``batch`` sequential steps, each
+               paying the per-step dispatch latency the paper's Fig. 2
+               measures — modeled, like measured, as strictly dominated for
+               real batch sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.analysis.roofline import HW
+from repro.core.batching import BatchPlan, plan_batched_gemm, plan_batched_spmm
+
+# Overhead constants (seconds). These are *relative* knobs, not measurements:
+# the model only needs ordering, and the ordering is validated against the
+# ref oracle in tests/test_autotune.py and refined on-device by
+# repro.autotune.cache when a tuning cache is enabled.
+OP_OVERHEAD = 2e-6       # one fused XLA op inside a jitted program
+SCAN_STEP_OVERHEAD = 2e-6  # one sequential scan iteration (the 'loop' path)
+GRID_STEP_OVERHEAD = 0.2e-6  # one Pallas grid step
+SCATTER_PENALTY = 3.0    # read-modify-write amplification of scatter-adds
+_COO_CHUNK = 128         # mirrors kernels/batched_spmm_coo.CHUNK
+
+
+def _mxu_eff(m: int, n: int) -> float:
+    """Fraction of the 128x128 MXU tile a (m, n) product actually fills."""
+    return max(min(1.0, m / 128.0) * min(1.0, n / 128.0), 1e-3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Static shape key for one batched SpMM call (hashable, trace-safe).
+
+    ``nnz_pad`` is the COO slot count per matrix (the density proxy: the
+    planner and the kernels both pay for padded slots), ``k_pad`` the ELL
+    slots per row or None when no ELL conversion is available.
+    """
+
+    batch: int
+    m_pad: int
+    nnz_pad: int
+    k_pad: int | None
+    n_b: int
+    itemsize: int = 4
+
+    def key(self) -> str:
+        """Stable string key for the persistent tuning cache (DESIGN.md §5)."""
+        k = self.k_pad if self.k_pad is not None else 0
+        return (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
+                f"_k{k}_n{self.n_b}_i{self.itemsize}")
+
+
+def spmm_plan(w: Workload, impl: str | None = None) -> BatchPlan:
+    """The planner decision this workload falls under, with the SAME slot
+    accounting as kernels/ops.py: ``k_pad`` slots for the ELL kernel,
+    ``nnz_pad`` (COO) slots for everything else. ``impl=None`` means
+    "best available" (ELL accounting when k_pad is known). The case-3
+    boundary depends only on m_pad, so it is identical either way."""
+    if impl in (None, "ell", "pallas_ell") and w.k_pad is not None:
+        slots = w.k_pad
+    else:
+        slots = w.nnz_pad
+    return plan_batched_spmm(batch=w.batch, m_pad=w.m_pad, n_b=w.n_b,
+                             slots=slots, itemsize=w.itemsize)
+
+
+def _roofline(flops: float, bytes_: float, unit_peak: float,
+              hw: HW) -> float:
+    return max(flops / unit_peak, bytes_ / hw.hbm_bw)
+
+
+def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
+    """Estimated seconds for one batched call of ``impl`` on workload ``w``."""
+    vpu_peak = hw.peak_flops / 16.0           # vector (non-MXU) arithmetic
+    out_bytes = w.batch * w.m_pad * w.n_b * w.itemsize
+    b_bytes = w.batch * w.m_pad * w.n_b * w.itemsize
+
+    if impl in ("ref", "loop"):
+        gather = w.batch * w.nnz_pad * w.n_b * w.itemsize
+        idx = w.batch * w.nnz_pad * 8
+        flops = 2.0 * w.batch * w.nnz_pad * w.n_b
+        bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
+        t = _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
+        if impl == "loop":
+            # sequential per-sample execution: no cross-sample overlap, one
+            # step latency per sample — the Fig. 2 structure.
+            t = w.batch * (t / w.batch + SCAN_STEP_OVERHEAD)
+        return t
+
+    if impl in ("ell", "pallas_ell"):
+        if w.k_pad is None:
+            return float("inf")
+        slots = w.batch * w.m_pad * w.k_pad
+        flops = 2.0 * slots * w.n_b
+        if impl == "ell":
+            bytes_ = slots * (w.n_b * w.itemsize + 8) + out_bytes
+            return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
+        plan = spmm_plan(w, "pallas_ell")
+        if plan.case == 3:
+            return float("inf")   # kernels/ops.py falls back before Pallas
+        # per (matrix × panel) grid step: B panel + ELL arrays read from HBM,
+        # output panel written once; gathers happen VMEM-side.
+        per_step = (w.m_pad * plan.n_block * w.itemsize
+                    + w.m_pad * w.k_pad * (w.itemsize + 4))
+        bytes_ = w.batch * plan.p * per_step + out_bytes
+        steps = w.batch * plan.p
+        return (_roofline(flops, bytes_, vpu_peak, hw)
+                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
+
+    if impl == "pallas_coo":
+        plan = spmm_plan(w, "pallas_coo")
+        if plan.case == 3:
+            return float("inf")
+        chunks = -(-w.nnz_pad // _COO_CHUNK)
+        # one-hot scatter: a CHUNK×m_pad ᵀ× CHUNK×n_block MXU contraction per
+        # (chunk × matrix × panel)
+        flops = (2.0 * w.batch * plan.p * chunks * _COO_CHUNK
+                 * w.m_pad * plan.n_block)
+        per_step = (w.m_pad * plan.n_block * w.itemsize
+                    + chunks * _COO_CHUNK * (8 + w.itemsize))
+        bytes_ = w.batch * plan.p * per_step + out_bytes
+        steps = w.batch * plan.p
+        eff = _mxu_eff(w.m_pad, plan.n_block)
+        return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
+                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
+
+    if impl in ("dense", "pallas_gemm"):
+        densify = 2.0 * w.batch * w.m_pad * w.m_pad * w.itemsize  # write+read
+        flops = 2.0 * w.batch * w.m_pad * w.m_pad * w.n_b
+        bytes_ = densify + b_bytes + out_bytes
+        eff = _mxu_eff(w.m_pad, w.n_b)
+        t = _roofline(flops, bytes_, hw.peak_flops * eff, hw) + 2 * OP_OVERHEAD
+        if impl == "pallas_gemm":
+            plan = plan_batched_gemm(batch=w.batch, m=w.m_pad, n=w.n_b,
+                                     k=w.m_pad, itemsize=w.itemsize)
+            t += w.batch * plan.p * GRID_STEP_OVERHEAD
+        return t
+
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.lru_cache(maxsize=4096)
+def rank(w: Workload, *, allow_pallas: bool = True,
+         hw: HW = HW()) -> tuple[tuple[str, float], ...]:
+    """All runnable impls for ``w``, cheapest-first, as (impl, est-seconds).
+
+    ``allow_pallas=False`` (the CPU/interpret posture — Pallas interpret mode
+    is a Python emulator, never a performance path) restricts candidates to
+    the XLA-lowered impls.
+    """
+    candidates = ["ref", "ell", "dense", "loop"]
+    if allow_pallas:
+        candidates += ["pallas_ell", "pallas_coo", "pallas_gemm"]
+    scored = [(i, estimate(w, i, hw)) for i in candidates]
+    scored = [(i, t) for i, t in scored if t != float("inf")]
+    return tuple(sorted(scored, key=lambda it: it[1]))

@@ -14,4 +14,9 @@ from repro.core.batching import (  # noqa: F401
     plan_batched_gemm,
     plan_batched_spmm,
 )
-from repro.core.spmm import IMPLS, batched_spmm, dense_batched_matmul  # noqa: F401
+from repro.core.spmm import (  # noqa: F401
+    IMPLS,
+    batched_spmm,
+    dense_batched_matmul,
+    resolve_impl,
+)

@@ -34,7 +34,7 @@ def graph_conv_batched(
     adj: Sequence[BatchedCOO],   # one BatchedCOO per channel, batch-leading
     x: jax.Array,                # (batch, m_pad, n_in)
     *,
-    impl: str = "ref",
+    impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:

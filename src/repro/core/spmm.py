@@ -1,5 +1,14 @@
 """User-facing batched SpMM API (re-export; the implementation lives in
-``repro.kernels.ops`` next to the kernels it dispatches to)."""
-from repro.kernels.ops import IMPLS, batched_spmm, dense_batched_matmul
+``repro.kernels.ops`` next to the kernels it dispatches to).
 
-__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul"]
+``resolve_impl`` exposes the adaptive ``impl="auto"`` decision (DESIGN.md §5)
+so callers and benchmarks can inspect *why* a kernel was chosen.
+"""
+from repro.kernels.ops import (
+    IMPLS,
+    batched_spmm,
+    dense_batched_matmul,
+    resolve_impl,
+)
+
+__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul", "resolve_impl"]

@@ -10,7 +10,13 @@ the whole batch. ``impl`` selects:
 - ``"dense"``      densify + batched GEMM (the cuBLAS gemmBatched baseline);
 - ``"pallas_gemm"`` densify + MXU Pallas batched GEMM;
 - ``"loop"``       the NON-batched baseline: one sequential SpMM per sample,
-                   reproducing the paper's per-sample-kernel-launch structure.
+                   reproducing the paper's per-sample-kernel-launch structure;
+- ``"auto"``       (default) shape-keyed adaptive dispatch: the paper's
+                   §IV-B/§IV-C resource-assignment policy extended into a
+                   which-kernel decision by ``repro.autotune`` (cost model +
+                   optional measured tuning cache — DESIGN.md §5). Resolution
+                   happens at trace time from static shapes, so it is
+                   jit-safe and free at run time.
 
 The VJP follows the paper's backward-pass batching: dB = batched-SpMM with Aᵀ
 (index swap — free in COO), and dValues is a batched gather-dot. Both run as
@@ -30,8 +36,39 @@ from repro.kernels.batched_gemm import batched_gemm
 from repro.kernels.batched_spmm_coo import batched_spmm_coo
 from repro.kernels.batched_spmm_ell import batched_spmm_ell
 
-IMPLS = ("ref", "ell", "pallas_ell", "pallas_coo", "dense", "pallas_gemm",
-         "loop")
+IMPLS = ("auto", "ref", "ell", "pallas_ell", "pallas_coo", "dense",
+         "pallas_gemm", "loop")
+
+
+def resolve_impl(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool = True,
+):
+    """Resolve ``impl="auto"`` to the concrete impl for this call's shapes.
+
+    Returns an ``repro.autotune.Decision`` (``.impl`` is the concrete
+    string); a concrete ``impl`` passes through as a forced Decision so
+    callers can introspect either path uniformly.
+    """
+    from repro import autotune
+
+    batch, m_pad, n_b = b.shape
+    if impl != "auto":
+        w = autotune.Workload(batch=batch, m_pad=m_pad,
+                              nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
+                              n_b=n_b, itemsize=b.dtype.itemsize)
+        plan = autotune.spmm_plan(w, impl)
+        return autotune.Decision(
+            impl=impl, kind=autotune.KINDS.get(impl, impl),
+            case=plan.case, plan=plan, scores=(), source="forced",
+            reason=f"caller pinned impl={impl!r}")
+    return autotune.resolve_auto(
+        batch=batch, m_pad=m_pad, nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
+        n_b=n_b, itemsize=b.dtype.itemsize, interpret=interpret)
 
 
 def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
@@ -58,6 +95,8 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
         )
         return batched_gemm(a_dense.astype(b.dtype), b, plan=plan,
                             interpret=interpret)
+    if impl in ("pallas_ell", "ell") and k_pad is None:
+        raise ValueError(f"{impl} requires k_pad (max nnz/row)")
     plan = batching.plan_batched_spmm(
         batch=batch, m_pad=m_pad, n_b=n_b,
         slots=k_pad if impl == "pallas_ell" else row_ids.shape[1],
@@ -68,8 +107,6 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
         # strategy — take the per-sample path.
         return ref.batched_spmm_coo_ref(a, b, m_pad)
     if impl in ("pallas_ell", "ell"):
-        if k_pad is None:
-            raise ValueError(f"{impl} requires k_pad (max nnz/row)")
         ell = coo_to_ell(a, m_pad, k_pad)
         if impl == "ell":
             # pure-XLA batched row-split (gather + contraction): the batched
@@ -87,15 +124,20 @@ def batched_spmm(
     a: BatchedCOO,
     b: jax.Array,
     *,
-    impl: str = "ref",
+    impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """C[s] = A[s] @ B[s] for every sample s in the batch, one device op.
 
     a: BatchedCOO over square (m_pad, m_pad) adjacencies; b: (batch, m_pad, n).
-    Differentiable in ``a.values`` and ``b``.
+    Differentiable in ``a.values`` and ``b``. ``impl="auto"`` (default)
+    resolves to a concrete implementation from the call's static shapes via
+    ``repro.autotune`` before any tracing-dependent work happens.
     """
+    if impl == "auto":
+        impl = resolve_impl(a, b, impl="auto", k_pad=k_pad,
+                            interpret=interpret).impl
 
     row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
 

@@ -1,1 +1,5 @@
-from repro.training.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.training.trainer import (  # noqa: F401
+    GCNTrainer,
+    Trainer,
+    TrainerConfig,
+)

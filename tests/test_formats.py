@@ -1,10 +1,20 @@
-"""Format conversions + hypothesis property tests on SpMM invariants."""
+"""Format conversions + hypothesis property tests on SpMM invariants.
+
+``hypothesis`` is an optional dev dependency (see pyproject.toml extras);
+the property tests are defined only when it is installed, so tier-1
+collection never fails on it and the deterministic tests always run.
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import (
     coo_from_lists,
@@ -51,70 +61,70 @@ def test_ell_matches_dense():
 
 
 # ---------------------------------------------------------------------------
-# Property tests (hypothesis)
+# Property tests (hypothesis) — decorators need hypothesis at definition
+# time, so the whole block is conditional on the optional dep.
 # ---------------------------------------------------------------------------
 
-@st.composite
-def coo_batches(draw):
-    batch = draw(st.integers(1, 5))
-    dim_hi = draw(st.integers(4, 40))
-    nnz_hi = draw(st.integers(1, 6))
-    seed = draw(st.integers(0, 2**16))
-    n_b = draw(st.sampled_from([1, 4, 16, 40, 130]))
-    coo, m_pad = _random_coo(seed, batch, (3, dim_hi), (1, nnz_hi))
-    b = jnp.asarray(
-        np.random.default_rng(seed + 1).normal(size=(batch, m_pad, n_b)),
-        jnp.float32)
-    return coo, m_pad, b
+if HAS_HYPOTHESIS:
+    @st.composite
+    def coo_batches(draw):
+        batch = draw(st.integers(1, 5))
+        dim_hi = draw(st.integers(4, 40))
+        nnz_hi = draw(st.integers(1, 6))
+        seed = draw(st.integers(0, 2**16))
+        n_b = draw(st.sampled_from([1, 4, 16, 40, 130]))
+        coo, m_pad = _random_coo(seed, batch, (3, dim_hi), (1, nnz_hi))
+        b = jnp.asarray(
+            np.random.default_rng(seed + 1).normal(size=(batch, m_pad, n_b)),
+            jnp.float32)
+        return coo, m_pad, b
 
+    @settings(max_examples=20, deadline=None)
+    @given(coo_batches())
+    def test_property_impls_equal_dense(case):
+        """∀ batches: every impl == densify+matmul oracle."""
+        coo, m_pad, b = case
+        want = np.asarray(
+            jax.lax.batch_matmul(coo_to_dense(coo, m_pad), b))
+        for impl in ("ref", "pallas_coo", "pallas_ell"):
+            got = np.asarray(batched_spmm(coo, b, impl=impl, k_pad=8))
+            np.testing.assert_allclose(got, want, atol=1e-4, err_msg=impl)
 
-@settings(max_examples=20, deadline=None)
-@given(coo_batches())
-def test_property_impls_equal_dense(case):
-    """∀ batches: every impl == densify+matmul oracle."""
-    coo, m_pad, b = case
-    want = np.asarray(jax.lax.batch_matmul(coo_to_dense(coo, m_pad), b))
-    for impl in ("ref", "pallas_coo", "pallas_ell"):
-        got = np.asarray(batched_spmm(coo, b, impl=impl, k_pad=8))
-        np.testing.assert_allclose(got, want, atol=1e-4, err_msg=impl)
+    @settings(max_examples=15, deadline=None)
+    @given(coo_batches(), st.floats(-3, 3), st.floats(-3, 3))
+    def test_property_linearity(case, alpha, beta):
+        """SpMM is linear in B: A(αB₁+βB₂) = αAB₁ + βAB₂."""
+        coo, m_pad, b = case
+        b2 = b[:, ::-1, :]
+        lhs = batched_spmm(coo, alpha * b + beta * b2, impl="ref")
+        rhs = (alpha * batched_spmm(coo, b, impl="ref")
+               + beta * batched_spmm(coo, b2, impl="ref"))
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   atol=1e-3, rtol=1e-4)
 
+    @settings(max_examples=15, deadline=None)
+    @given(coo_batches(), st.integers(1, 64))
+    def test_property_padding_invariance(case, extra):
+        """Adding zero-valued padding slots never changes the product (the
+        paper's §IV-C 'redundant threads terminate immediately' invariant)."""
+        coo, m_pad, b = case
+        pad = lambda x: jnp.pad(x, ((0, 0), (0, extra)))  # noqa: E731
+        coo2 = dataclasses.replace(
+            coo, row_ids=pad(coo.row_ids), col_ids=pad(coo.col_ids),
+            values=pad(coo.values))
+        got = batched_spmm(coo2, b, impl="ref")
+        want = batched_spmm(coo, b, impl="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
 
-@settings(max_examples=15, deadline=None)
-@given(coo_batches(), st.floats(-3, 3), st.floats(-3, 3))
-def test_property_linearity(case, alpha, beta):
-    """SpMM is linear in B: A(αB₁+βB₂) = αAB₁ + βAB₂."""
-    coo, m_pad, b = case
-    b2 = b[:, ::-1, :]
-    lhs = batched_spmm(coo, alpha * b + beta * b2, impl="ref")
-    rhs = (alpha * batched_spmm(coo, b, impl="ref")
-           + beta * batched_spmm(coo, b2, impl="ref"))
-    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
-                               atol=1e-3, rtol=1e-4)
-
-
-@settings(max_examples=15, deadline=None)
-@given(coo_batches(), st.integers(1, 64))
-def test_property_padding_invariance(case, extra):
-    """Adding zero-valued padding slots never changes the product (the
-    paper's §IV-C 'redundant threads terminate immediately' invariant)."""
-    coo, m_pad, b = case
-    pad = lambda x: jnp.pad(x, ((0, 0), (0, extra)))
-    coo2 = dataclasses.replace(
-        coo, row_ids=pad(coo.row_ids), col_ids=pad(coo.col_ids),
-        values=pad(coo.values))
-    got = batched_spmm(coo2, b, impl="ref")
-    want = batched_spmm(coo, b, impl="ref")
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
-
-
-@settings(max_examples=10, deadline=None)
-@given(coo_batches())
-def test_property_batch_independence(case):
-    """Batching never mixes samples: batched result row b == single-sample
-    result for sample b (the core correctness claim of Batched SpMM)."""
-    coo, m_pad, b = case
-    full = np.asarray(batched_spmm(coo, b, impl="ref"))
-    for s in range(min(coo.batch, 3)):
-        single = ref.spmm_coo_single(
-            coo.row_ids[s], coo.col_ids[s], coo.values[s], b[s], m_pad)
-        np.testing.assert_allclose(full[s], np.asarray(single), atol=1e-5)
+    @settings(max_examples=10, deadline=None)
+    @given(coo_batches())
+    def test_property_batch_independence(case):
+        """Batching never mixes samples: batched result row b == single-sample
+        result for sample b (the core correctness claim of Batched SpMM)."""
+        coo, m_pad, b = case
+        full = np.asarray(batched_spmm(coo, b, impl="ref"))
+        for s in range(min(coo.batch, 3)):
+            single = ref.spmm_coo_single(
+                coo.row_ids[s], coo.col_ids[s], coo.values[s], b[s], m_pad)
+            np.testing.assert_allclose(full[s], np.asarray(single),
+                                       atol=1e-5)
