@@ -201,7 +201,7 @@ class HloModule:
                 total += sum(_shape_bytes(c.result_txt) for c in consumers)
             elif consumers and all(
                     c.opcode == "dynamic-update-slice"
-                    and c.rest.lstrip().startswith(f"%{pname}")
+                    and (_OPERAND_RE.findall(c.rest) or [None])[0] == pname
                     for c in consumers):
                 # param is the DUS *destination*: updated in place; the write
                 # is the update region, charged via the update operand below

@@ -26,6 +26,7 @@ from repro.autotune.cost_model import (  # noqa: F401
 from repro.autotune.selector import (  # noqa: F401
     KINDS,
     Decision,
+    forced_decision,
     resolve_auto,
     select_impl,
 )
@@ -33,5 +34,5 @@ from repro.autotune.selector import (  # noqa: F401
 __all__ = [
     "ENV_VAR", "TuningCache", "autotune", "default_cache", "measure_workload",
     "Workload", "estimate", "rank", "spmm_plan",
-    "KINDS", "Decision", "resolve_auto", "select_impl",
+    "KINDS", "Decision", "forced_decision", "resolve_auto", "select_impl",
 ]

@@ -81,6 +81,15 @@ class Workload:
         return (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
                 f"_k{k}_n{self.n_b}_i{self.itemsize}")
 
+    def shard(self, n_shards: int) -> "Workload":
+        """The per-shard view of this workload on an ``n_shards``-way mesh:
+        batch ``ceil(batch / n_shards)`` (the batch axis is padded to a
+        multiple before sharding), every other dimension unchanged. This is
+        the workload each device actually runs under
+        ``repro.distributed.spmm.sharded_batched_spmm``, and therefore the
+        one ``impl="auto"`` must be resolved against (DESIGN.md §6)."""
+        return dataclasses.replace(self, batch=-(-self.batch // n_shards))
+
 
 def spmm_plan(w: Workload, impl: str | None = None) -> BatchPlan:
     """The planner decision this workload falls under, with the SAME slot

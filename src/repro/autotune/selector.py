@@ -54,6 +54,18 @@ class Decision:
     reason: str                     # one-line human-readable justification
 
 
+def forced_decision(w: Workload, impl: str, *, note: str = "") -> Decision:
+    """The Decision for a caller-pinned concrete ``impl``: no ranking, but
+    the same auditable plan/case fields as a model decision. Shared by the
+    local (``kernels/ops.py``) and mesh-sharded (``distributed/spmm.py``)
+    resolution paths so the forced-path semantics cannot diverge."""
+    plan = spmm_plan(w, impl)
+    return Decision(
+        impl=impl, kind=KINDS.get(impl, impl), case=plan.case, plan=plan,
+        scores=(), source="forced",
+        reason=f"caller pinned impl={impl!r}{note}")
+
+
 def select_impl(
     w: Workload,
     *,

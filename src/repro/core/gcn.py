@@ -88,6 +88,8 @@ def apply_gcn(
     adj: Sequence[BatchedCOO],
     x: jax.Array,                # (batch, m_pad, n_features)
     n_nodes: jax.Array,          # (batch,) true node counts
+    *,
+    mesh=None,                   # shard every SpMM's batch axis (DESIGN.md §6)
 ) -> jax.Array:
     mask = (
         jnp.arange(x.shape[1])[None, :, None] < n_nodes[:, None, None]
@@ -96,7 +98,8 @@ def apply_gcn(
     for conv_p, bn_p in zip(params["convs"], params["bns"]):
         if cfg.batched:
             h = graph_conv_batched(conv_p, adj, h, impl=cfg.impl,
-                                   k_pad=cfg.k_pad, interpret=cfg.interpret)
+                                   k_pad=cfg.k_pad, interpret=cfg.interpret,
+                                   mesh=mesh)
         else:
             h = graph_conv_nonbatched(conv_p, adj, h)
         h = _batch_norm(bn_p, h * mask, mask)
@@ -105,8 +108,8 @@ def apply_gcn(
     return readout @ params["head"]["w"] + params["head"]["b"]
 
 
-def gcn_loss(params, cfg: GCNConfig, adj, x, n_nodes, labels):
-    logits = apply_gcn(params, cfg, adj, x, n_nodes)
+def gcn_loss(params, cfg: GCNConfig, adj, x, n_nodes, labels, *, mesh=None):
+    logits = apply_gcn(params, cfg, adj, x, n_nodes, mesh=mesh)
     if cfg.task == "multitask_binary":
         # labels: (batch, n_tasks) in {0, 1}
         z = logits

@@ -37,16 +37,22 @@ def graph_conv_batched(
     impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool = True,
+    mesh=None,
 ) -> jax.Array:
     """Paper Fig. 7: per channel, one MatMul over the whole mini-batch
     (the reshape to (m_X·batchsize, n_X) is implicit in the batched einsum),
-    one Add, one Batched SpMM; then the element-wise channel sum."""
+    one Add, one Batched SpMM; then the element-wise channel sum.
+
+    ``mesh=`` shards each channel's Batched SpMM over the mesh's ``"data"``
+    axis (DESIGN.md §6); the surrounding MatMul/Add/sum stay ordinary XLA ops
+    that GSPMD partitions around the sharded SpMM.
+    """
     y = None
     for ch, a_ch in enumerate(adj):
         u = jnp.einsum("bmn,nf->bmf", x, params["w"][ch])      # MATMUL (one op)
         u = u + params["b"][ch]                                 # ADD (one op)
         c = batched_spmm(a_ch, u, impl=impl, k_pad=k_pad,
-                         interpret=interpret)                   # BATCHEDSPMM
+                         interpret=interpret, mesh=mesh)        # BATCHEDSPMM
         y = c if y is None else y + c                           # ELEMENTWISEADD
     return y
 

@@ -3,6 +3,12 @@
 
 ``resolve_impl`` exposes the adaptive ``impl="auto"`` decision (DESIGN.md §5)
 so callers and benchmarks can inspect *why* a kernel was chosen.
+
+``sharded_batched_spmm`` / ``resolve_sharded_impl`` are the mesh-sharded
+variants (DESIGN.md §6): the batch axis split over a ``("data",)`` mesh axis,
+with ``impl="auto"`` resolved against the per-shard workload. They are
+imported lazily so ``repro.core`` stays importable without touching the
+distributed stack.
 """
 from repro.kernels.ops import (
     IMPLS,
@@ -11,4 +17,13 @@ from repro.kernels.ops import (
     resolve_impl,
 )
 
-__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul", "resolve_impl"]
+__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul", "resolve_impl",
+           "sharded_batched_spmm", "resolve_sharded_impl"]
+
+
+def __getattr__(name):
+    if name in ("sharded_batched_spmm", "resolve_sharded_impl"):
+        from repro.distributed import spmm as _dspmm
+
+        return getattr(_dspmm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,1 +1,2 @@
-"""Distribution: sharding rules, pjit step builders, compression, collectives."""
+"""Distribution: sharding rules, pjit step builders, compression, collectives,
+and the mesh-sharded Batched SpMM (``repro.distributed.spmm``, DESIGN.md §6)."""

@@ -108,10 +108,14 @@ def build_pp_loss(cfg: ModelConfig, mesh, *, microbatches: int,
                 logz = jax.scipy.special.logsumexp(logits, axis=-1)
                 gold = jnp.take_along_axis(
                     logits, targets[..., None], axis=-1)[..., 0]
-                nll = jnp.sum(logz - gold)
+                # rank-1 (not scalar) accumulators: a rank-0 float residual
+                # inside shard_map trips jax's scalar-residual _SpecError when
+                # the loss is differentiated (shard_map transpose gives
+                # residuals a mesh-axis spec that rank 0 cannot carry).
+                nll = jnp.sum(logz - gold).reshape(1)
                 loss_sum = loss_sum + jnp.where(valid, nll, 0.0)
                 tok_sum = tok_sum + jnp.where(
-                    valid, jnp.float32(targets.size), 0.0)
+                    valid, jnp.float32(targets.size).reshape(1), 0.0)
                 # forward activation to the next stage
                 act_out = jax.lax.ppermute(
                     h, pipe_axis,
@@ -120,13 +124,14 @@ def build_pp_loss(cfg: ModelConfig, mesh, *, microbatches: int,
 
             act0 = jnp.zeros((b, t, d), jnp.dtype(cfg.dtype))
             (_, loss_sum, tok_sum), _ = jax.lax.scan(
-                tick, (act0, jnp.float32(0), jnp.float32(0)),
+                tick, (act0, jnp.zeros((1,), jnp.float32),
+                       jnp.zeros((1,), jnp.float32)),
                 jnp.arange(ticks))
             # only the last stage accumulated loss; share it with everyone
             loss_sum = jax.lax.psum(loss_sum, pipe_axis)
             tok_sum = jax.lax.psum(tok_sum, pipe_axis)
             return loss_sum / jnp.maximum(tok_sum, 1.0)
 
-        return run(params, mbs)
+        return run(params, mbs)[0]
 
     return loss_fn

@@ -1,0 +1,180 @@
+"""Mesh-sharded Batched SpMM — the batch axis across a device mesh.
+
+The paper's core claim is that batching many small SpMMs into ONE kernel
+launch is what saturates one device (§IV); this module is the next rung:
+split the *batch* axis of a :class:`~repro.core.formats.BatchedCOO` (and its
+dense operand) over a ``("data",)`` mesh axis with ``shard_map`` and run the
+existing single-device batched kernels on each shard (DESIGN.md §6).
+
+Design points:
+
+- **Per-shard autotuning.** ``impl="auto"`` is resolved against the
+  *per-shard* workload (``batch_padded // n_shards`` samples), not the global
+  one — the adaptive dispatcher's cost model (DESIGN.md §5) sees the shapes
+  the kernel will actually run at, so a global batch that would pick the GEMM
+  class may correctly pick the scatter class once split 8 ways.
+  :func:`resolve_sharded_impl` exposes that decision for audit.
+- **Padding invariant (§IV-C).** A batch not divisible by the shard count is
+  padded with zero-nnz samples (value 0.0, indices 0) — exactly the padded
+  slots the kernels already tolerate — and the output is sliced back.
+- **No forward all-gather.** ``out_specs=P(axis)`` keeps the output
+  batch-sharded; consumers that keep reducing along non-batch axes never pay
+  a gather. The custom-VJP backward runs inside the same ``shard_map``, so
+  dValues and dB come out batch-sharded too.
+
+``shard_map`` requires every float leaf to be rank ≥ 1 per shard — all
+BatchedCOO leaves are batch-leading arrays, so the specs are uniform
+``P(axis)`` on dim 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.formats import BatchedCOO
+
+__all__ = [
+    "pad_batch",
+    "resolve_sharded_impl",
+    "shard_count",
+    "sharded_batched_spmm",
+]
+
+
+def shard_count(mesh: Mesh, axis: str = "data") -> int:
+    """Number of shards the batch axis is split into on ``mesh``."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        raise ValueError(
+            f"mesh has axes {mesh.axis_names}, no {axis!r} axis to shard the "
+            "batch over")
+    return sizes[axis]
+
+
+def pad_batch(a: BatchedCOO, b: jax.Array, n_shards: int
+              ) -> tuple[BatchedCOO, jax.Array, int]:
+    """Pad the batch axis to a multiple of ``n_shards`` with zero-nnz samples
+    (the §IV-C padding invariant: indices 0, values 0.0, nnz 0 contribute
+    nothing). Returns (a, b, pad) with ``pad`` rows to slice off outputs."""
+    batch = b.shape[0]
+    pad = (-batch) % n_shards
+    if pad == 0:
+        return a, b, 0
+
+    def padb(x):
+        return jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+    a = BatchedCOO(
+        row_ids=padb(a.row_ids), col_ids=padb(a.col_ids),
+        values=padb(a.values), nnz=padb(a.nnz),
+        # padded samples keep the real m_pad so per-shard geometry is uniform
+        n_rows=jnp.concatenate(
+            [a.n_rows, jnp.full((pad,), b.shape[1], a.n_rows.dtype)]),
+    )
+    return a, padb(b), pad
+
+
+def resolve_sharded_impl(
+    a: BatchedCOO,
+    b: jax.Array,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool = True,
+):
+    """Resolve ``impl`` against the PER-SHARD workload shapes.
+
+    Returns an :class:`repro.autotune.Decision` whose ``plan``/``scores``
+    describe one shard's call — batch ``ceil(batch / n_shards)``, everything
+    else unchanged — which is the workload each device actually runs.
+    """
+    from repro import autotune
+
+    n = shard_count(mesh, axis)
+    batch, m_pad, n_b = b.shape
+    w = autotune.Workload(batch=batch, m_pad=m_pad,
+                          nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
+                          n_b=n_b, itemsize=b.dtype.itemsize).shard(n)
+    if impl != "auto":
+        return autotune.forced_decision(w, impl, note=f" ({n}-way sharded)")
+    return autotune.select_impl(w, allow_pallas=not interpret,
+                                cache=autotune.default_cache())
+
+
+def sharded_batched_spmm(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "data",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C[s] = A[s] @ B[s] with the batch axis sharded over ``mesh[axis]``.
+
+    Semantically identical to :func:`repro.kernels.ops.batched_spmm` (the
+    per-shard kernels are the same code); differentiable in ``a.values`` and
+    ``b`` with batch-sharded cotangents. ``impl="auto"`` resolves against the
+    per-shard workload. Output stays batch-sharded (no forward all-gather).
+    """
+    from repro.kernels.ops import _forward, batched_spmm, bwd_impl_for, dvalues
+
+    n = shard_count(mesh, axis)
+    if n == 1:
+        return batched_spmm(a, b, impl=impl, k_pad=k_pad, interpret=interpret)
+
+    batch = b.shape[0]
+    a, b, pad = pad_batch(a, b, n)
+    concrete = resolve_sharded_impl(
+        a, b, mesh, axis=axis, impl=impl, k_pad=k_pad,
+        interpret=interpret).impl
+
+    spec = P(axis)      # dim-0 (batch) sharding for every operand
+    row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
+
+    # The custom VJP lives OUTSIDE the shard_map and each side runs its own
+    # shard_map over explicit operands: AD never differentiates *through* a
+    # shard_map (no transpose, no scalar-residual issues), and the backward
+    # is itself a batch-sharded batched SpMM + gather-dot, so dValues/dB come
+    # out batch-sharded exactly like the forward output.
+    def _fwd_local(rids, cids, nz, values, b_local):
+        return _forward(rids, cids, nz, values, b_local,
+                        impl=concrete, k_pad=k_pad, interpret=interpret)
+
+    fwd_sharded = shard_map(
+        _fwd_local, mesh=mesh, in_specs=(spec,) * 5, out_specs=spec,
+        check_rep=False)
+
+    def _bwd_local(rids, cids, nz, values, b_local, dc):
+        db = _forward(cids, rids, nz, values, dc,
+                      impl=bwd_impl_for(concrete), k_pad=None,
+                      interpret=interpret)
+        dval = dvalues(rids, cids, dc, b_local)
+        return dval.astype(values.dtype), db.astype(b_local.dtype)
+
+    bwd_sharded = shard_map(
+        _bwd_local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(spec, spec),
+        check_rep=False)
+
+    @jax.custom_vjp
+    def f(values, bb):
+        return fwd_sharded(row_ids, col_ids, nnz, values, bb)
+
+    def fwd(values, bb):
+        return f(values, bb), (values, bb)
+
+    def bwd(res, dc):
+        values, bb = res
+        return bwd_sharded(row_ids, col_ids, nnz, values, bb, dc)
+
+    f.defvjp(fwd, bwd)
+    out = f(a.values, b)
+    return out[:batch] if pad else out

@@ -65,10 +65,22 @@ def build_train_step(cfg: ModelConfig, mesh, opt: AdamConfig, *,
 
             mbs = jax.tree.map(split, batch)
 
+            def constrain(mb):
+                # Pin each microbatch to the plain data-parallel layout. On a
+                # mixed (data × model) mesh, GSPMD otherwise picks an ad-hoc
+                # layout for the scanned operand ("involuntary full
+                # rematerialization") whose numerics drift ~1e-4 per forward
+                # from the single-device program — enough to break loss-parity
+                # across mesh shapes after a few optimizer steps.
+                specs = sharding.batch_specs(mb, mesh)
+                return jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(
+                        x, jax.sharding.NamedSharding(mesh, s)), mb, specs)
+
             def acc_body(carry, mb):
                 g_acc, l_acc = carry
                 (loss, metrics), g = jax.value_and_grad(
-                    micro_loss, has_aux=True)(params, mb)
+                    micro_loss, has_aux=True)(params, constrain(mb))
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g)
                 return (g_acc, l_acc + loss), None

@@ -61,11 +61,7 @@ def resolve_impl(
         w = autotune.Workload(batch=batch, m_pad=m_pad,
                               nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
                               n_b=n_b, itemsize=b.dtype.itemsize)
-        plan = autotune.spmm_plan(w, impl)
-        return autotune.Decision(
-            impl=impl, kind=autotune.KINDS.get(impl, impl),
-            case=plan.case, plan=plan, scores=(), source="forced",
-            reason=f"caller pinned impl={impl!r}")
+        return autotune.forced_decision(w, impl)
     return autotune.resolve_auto(
         batch=batch, m_pad=m_pad, nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
         n_b=n_b, itemsize=b.dtype.itemsize, interpret=interpret)
@@ -120,6 +116,28 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
     raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
 
 
+def bwd_impl_for(impl: str) -> str:
+    """The impl the backward pass (dB = Aᵀ @ dC) runs for a forward ``impl``.
+
+    Aᵀ loses the per-row ELL bound, so ELL-class forwards fall back to the
+    COO/scatter class; shared by the local and the mesh-sharded VJP.
+    """
+    if impl.startswith("pallas"):
+        return "pallas_coo"
+    return impl if impl in ("ref", "loop", "dense") else "ref"
+
+
+def dvalues(row_ids, col_ids, dc, b):
+    """dValues[i] = <dC[rid[i]], B[cid[i]]> — the batched gather-dot of the
+    VJP (paper §IV-D), shared by the local and the mesh-sharded backward."""
+
+    def one(rid, cid, dcc, bb):
+        return jnp.sum(
+            jnp.take(dcc, rid, axis=0) * jnp.take(bb, cid, axis=0), axis=-1)
+
+    return jax.vmap(one)(row_ids, col_ids, dc, b)
+
+
 def batched_spmm(
     a: BatchedCOO,
     b: jax.Array,
@@ -127,6 +145,8 @@ def batched_spmm(
     impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool = True,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> jax.Array:
     """C[s] = A[s] @ B[s] for every sample s in the batch, one device op.
 
@@ -134,7 +154,18 @@ def batched_spmm(
     Differentiable in ``a.values`` and ``b``. ``impl="auto"`` (default)
     resolves to a concrete implementation from the call's static shapes via
     ``repro.autotune`` before any tracing-dependent work happens.
+
+    ``mesh=`` routes the call through the mesh-sharded path
+    (:func:`repro.distributed.spmm.sharded_batched_spmm`): the batch axis is
+    split over ``mesh_axis`` and the per-shard kernels run under shard_map,
+    with ``impl="auto"`` resolved against the per-shard workload.
     """
+    if mesh is not None:
+        from repro.distributed.spmm import sharded_batched_spmm
+
+        return sharded_batched_spmm(a, b, mesh=mesh, axis=mesh_axis,
+                                    impl=impl, k_pad=k_pad,
+                                    interpret=interpret)
     if impl == "auto":
         impl = resolve_impl(a, b, impl="auto", k_pad=k_pad,
                             interpret=interpret).impl
@@ -153,17 +184,9 @@ def batched_spmm(
         values, b = res
         # dB = Aᵀ @ dC — batched SpMM with swapped indices (paper §IV-D:
         # "The Batched SpMM is also applied to backward propagation").
-        bwd_impl = "pallas_coo" if impl.startswith("pallas") else (
-            impl if impl in ("ref", "loop", "dense") else "ref")
         db = _forward(col_ids, row_ids, nnz, values, dc,
-                      impl=bwd_impl, k_pad=None, interpret=interpret)
-        # dValues[i] = <dC[rid[i]], B[cid[i]]> — batched gather-dot.
-        def dval_one(rid, cid, dcc, bb):
-            return jnp.sum(
-                jnp.take(dcc, rid, axis=0) * jnp.take(bb, cid, axis=0), axis=-1
-            )
-
-        dval = jax.vmap(dval_one)(row_ids, col_ids, dc, b).astype(values.dtype)
+                      impl=bwd_impl_for(impl), k_pad=None, interpret=interpret)
+        dval = dvalues(row_ids, col_ids, dc, b).astype(values.dtype)
         return dval, db.astype(b.dtype)
 
     f.defvjp(fwd, bwd)

@@ -44,7 +44,8 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    done: bool = False          # served to completion (max_new_tokens reached)
+    truncated: bool = False     # cut off by the engine's max_len window
 
 
 def _serve_in_waves(engine, requests: list) -> list:
@@ -90,7 +91,14 @@ class ServeEngine:
         cur = np.asarray(self._sample(last[:, 0, :]))
         active = np.array([True] * n + [False] * (self.batch - n))
         for s, r in enumerate(wave):
+            if r.max_new_tokens <= 0:       # zero-budget: served, no tokens
+                r.done = True
+                active[s] = False
+                continue
             r.out.append(int(cur[s]))
+            if r.max_new_tokens <= 1:
+                r.done = True
+                active[s] = False
         while active.any() and pos < self.max_len - 1:
             logits, caches = self._decode(
                 self.params, jnp.asarray(cur.reshape(-1, 1)), caches,
@@ -104,8 +112,12 @@ class ServeEngine:
                 if len(r.out) >= r.max_new_tokens:
                     r.done = True
                     active[s] = False
-        for r in wave:
-            r.done = True
+        # slots still active here hit the max_len window, not their token
+        # budget: record the truncation honestly instead of claiming done.
+        for s, r in enumerate(wave):
+            if active[s]:
+                r.truncated = True
+                active[s] = False
 
     def run(self, requests: list[Request]) -> list[Request]:
         return _serve_in_waves(self, requests)
@@ -135,12 +147,18 @@ class GraphServeEngine:
     """
 
     def __init__(self, params, cfg: GCNConfig, *, batch: int = 32,
-                 m_pad: int = 56, nnz_pad: int = 256):
+                 m_pad: int = 56, nnz_pad: int = 256, mesh=None):
         self.params, self.cfg = params, cfg
         self.batch, self.m_pad, self.nnz_pad = batch, m_pad, nnz_pad
+        self.mesh = mesh
+        if mesh is not None:
+            params = jax.device_put(params, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+            self.params = params
         self._apply = jax.jit(
             lambda adj_arrays, x, n_nodes: apply_gcn(
-                params, cfg, self._rebuild(adj_arrays), x, n_nodes))
+                params, cfg, self._rebuild(adj_arrays), x, n_nodes,
+                mesh=mesh))
 
     @staticmethod
     def _rebuild(adj_arrays):
@@ -185,8 +203,20 @@ class GraphServeEngine:
                for t in triples_by_ch]
         adj_arrays = [(a.row_ids, a.col_ids, a.values, a.nnz, a.n_rows)
                       for a in adj]
-        logits = np.asarray(self._apply(
-            adj_arrays, jnp.asarray(x), jnp.asarray(n_nodes)))
+        x, n_nodes = jnp.asarray(x), jnp.asarray(n_nodes)
+        if self.mesh is not None:
+            # one wave spans every device: batch-shard the wave operands so
+            # each shard_map'd SpMM (and the dense ops GSPMD partitions
+            # around it) runs on its slice of the slots
+            from repro.distributed import sharding as shrules
+
+            def place(leaf):
+                return jax.device_put(leaf, jax.sharding.NamedSharding(
+                    self.mesh, shrules.batch_specs(leaf, self.mesh)))
+
+            adj_arrays, x, n_nodes = jax.tree.map(
+                place, (adj_arrays, x, n_nodes))
+        logits = np.asarray(self._apply(adj_arrays, x, n_nodes))
         for s in range(n):
             wave[s].logits = logits[s]
             wave[s].done = True

@@ -133,13 +133,21 @@ class GCNTrainer:
     arrays at the jit boundary (the quickstart/test idiom) so retracing is
     shape-keyed only. The SpMM implementation comes from ``cfg.impl`` —
     ``"auto"`` by default, resolved per workload by ``repro.autotune``.
+
+    ``mesh=`` turns the step data-parallel (DESIGN.md §6): every graph
+    convolution's Batched SpMM runs mesh-sharded over the ``"data"`` axis
+    (per-shard ``impl="auto"`` resolution), batch leaves are placed
+    batch-sharded on the mesh, params/optimizer state stay replicated, and
+    the gradient all-reduce over the mesh is inserted by GSPMD from exactly
+    that sharded-batch/replicated-params layout.
     """
 
     def __init__(self, cfg: GCNConfig, opt: AdamConfig | None = None,
-                 tcfg: TrainerConfig | None = None):
+                 tcfg: TrainerConfig | None = None, *, mesh=None):
         self.cfg = cfg
         self.opt = opt or AdamConfig(lr=3e-3)
         self.tcfg = tcfg or TrainerConfig()
+        self.mesh = mesh
         self.manager = CheckpointManager(self.tcfg.checkpoint_dir,
                                          keep=self.tcfg.keep)
 
@@ -147,7 +155,8 @@ class GCNTrainer:
         def step(params, state, adj_arrays, x, n_nodes, labels):
             adj = [BatchedCOO(*a) for a in adj_arrays]
             (loss, acc), grads = jax.value_and_grad(
-                lambda p: gcn_loss(p, self.cfg, adj, x, n_nodes, labels),
+                lambda p: gcn_loss(p, self.cfg, adj, x, n_nodes, labels,
+                                   mesh=mesh),
                 has_aux=True)(params)
             params, state = adam_update(self.opt, params, grads, state)
             return params, state, loss, acc
@@ -156,7 +165,28 @@ class GCNTrainer:
 
     def init_state(self):
         params = init_gcn(jax.random.key(self.tcfg.seed), self.cfg)
-        return params, adam_init(params)
+        state = adam_init(params)
+        if self.mesh is not None:
+            repl = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            params = jax.device_put(params, repl)
+            state = jax.device_put(state, repl)
+        return params, state
+
+    def _place_batch(self, tree):
+        """Batch-shard every batch-leading leaf on the mesh's data axis (the
+        computation then follows the data: SpMMs run per-shard, GSPMD
+        all-reduces the grads)."""
+        if self.mesh is None:
+            return tree
+        from repro.distributed import sharding as shrules
+
+        def one(x):
+            spec = shrules.batch_specs(x, self.mesh)
+            return jax.device_put(
+                x, jax.sharding.NamedSharding(self.mesh, spec))
+
+        return jax.tree.map(one, tree)
 
     def fit(self, batch_iter: Iterator[dict] | Callable, *, epochs: int = 1,
             on_metrics: Callable[[int, dict], None] | None = None):
@@ -177,9 +207,10 @@ class GCNTrainer:
             for b in batch_iter(epoch):
                 adj_arrays = [(a.row_ids, a.col_ids, a.values, a.nnz,
                                a.n_rows) for a in b["adj"]]
+                adj_arrays, x, n_nodes, labels = self._place_batch(
+                    (adj_arrays, b["x"], b["n_nodes"], b["labels"]))
                 params, state, loss, acc = self._step(
-                    params, state, adj_arrays, b["x"], b["n_nodes"],
-                    b["labels"])
+                    params, state, adj_arrays, x, n_nodes, labels)
                 step += 1
                 if step % max(self.tcfg.checkpoint_every, 1) == 0:
                     self.manager.save(step, (params, state))

@@ -36,6 +36,30 @@ def test_greedy_decode_is_deterministic_and_batch_invariant():
     assert r1.out == r2.out, (r1.out, r2.out)
 
 
+def test_truncated_requests_reported_not_done():
+    """A request whose budget cannot fit in the engine's max_len window is
+    reported truncated, not silently marked done."""
+    engine, _ = _engine()            # max_len=48
+    long = Request(prompt=[1, 2], max_new_tokens=500)
+    short = Request(prompt=[3, 4], max_new_tokens=4)
+    engine.run([long, short])
+    assert short.done and not short.truncated
+    assert len(short.out) == 4
+    assert long.truncated and not long.done
+    # generation ran to the window edge, then stopped honestly
+    assert 4 < len(long.out) < 500
+    assert len(long.out) <= engine.max_len
+
+
+def test_zero_budget_request_gets_no_tokens():
+    engine, _ = _engine()
+    zero = Request(prompt=[1, 2], max_new_tokens=0)
+    other = Request(prompt=[3, 4], max_new_tokens=3)
+    engine.run([zero, other])
+    assert zero.done and not zero.truncated and zero.out == []
+    assert other.done and len(other.out) == 3
+
+
 def test_greedy_matches_forward_argmax():
     """First sampled token == argmax of the full-sequence forward logits."""
     import jax.numpy as jnp
