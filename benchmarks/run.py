@@ -18,7 +18,7 @@ from benchmarks.common import header
 
 
 def _smoke_suites():
-    from benchmarks import bench_fig8, bench_fig9, bench_fig10
+    from benchmarks import bench_fig8, bench_fig9, bench_fig10, bench_fused
 
     def decisions():
         """Print the impl="auto" decision for the acceptance regimes."""
@@ -42,6 +42,7 @@ def _smoke_suites():
                                         n_bs=(16, 64))),
         ("fig9", lambda: bench_fig9.one(20, 32, 2, n_b=64)),
         ("fig10", lambda: bench_fig10.main(batch=20, n_bs=(64,))),
+        ("fused", lambda: bench_fused.main(smoke=True)),
         ("auto", decisions),
     ]
 
@@ -63,6 +64,7 @@ def main() -> None:
             bench_fig9,
             bench_fig10,
             bench_format,
+            bench_fused,
             bench_kernel_breakdown,
             bench_moe,
             bench_serve,
@@ -72,6 +74,7 @@ def main() -> None:
             ("fig8", lambda: bench_fig8.main()),
             ("fig9", lambda: bench_fig9.main()),
             ("fig10", lambda: bench_fig10.main()),
+            ("fused", lambda: bench_fused.main()),
             ("table4", lambda: bench_kernel_breakdown.main()),
             ("format", lambda: bench_format.main()),
             ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),

@@ -20,7 +20,9 @@ from repro.autotune.cache import (  # noqa: F401
 from repro.autotune.cost_model import (  # noqa: F401
     Workload,
     estimate,
+    estimate_layer,
     rank,
+    rank_layer,
     spmm_plan,
 )
 from repro.autotune.selector import (  # noqa: F401
@@ -28,11 +30,13 @@ from repro.autotune.selector import (  # noqa: F401
     Decision,
     forced_decision,
     resolve_auto,
+    select_graph_conv_impl,
     select_impl,
 )
 
 __all__ = [
     "ENV_VAR", "TuningCache", "autotune", "default_cache", "measure_workload",
-    "Workload", "estimate", "rank", "spmm_plan",
-    "KINDS", "Decision", "forced_decision", "resolve_auto", "select_impl",
+    "Workload", "estimate", "estimate_layer", "rank", "rank_layer",
+    "spmm_plan", "KINDS", "Decision", "forced_decision", "resolve_auto",
+    "select_graph_conv_impl", "select_impl",
 ]

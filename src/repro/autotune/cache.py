@@ -25,7 +25,7 @@ import json
 import os
 import tempfile
 
-from repro.autotune.cost_model import Workload, rank
+from repro.autotune.cost_model import Workload, rank, rank_layer
 
 ENV_VAR = "REPRO_TUNE_CACHE"
 _VERSION = 1
@@ -110,8 +110,14 @@ def measure_workload(
     (batch, nnz_pad) COO arrays, (batch, m_pad, n_b) dense operand, dtype
     from ``itemsize`` (2 → bfloat16, else float32) — so the measured record
     is keyed by precisely the shapes it ran, never an approximation.
-    Imports are local to avoid a cycle with ``kernels/ops.py`` (which
-    imports this package for ``impl="auto"``).
+
+    A LAYER workload (``w.channels``/``n_in`` set — the graph-conv keys of
+    ``select_graph_conv_impl``) is measured as the layer it keys: one whole
+    ``graph_conv_batched`` call per candidate (fused megakernel or stacked
+    fallback, matmul + SpMM + channel sum included), never a bare SpMM —
+    otherwise the record would override the layer model with a timing of a
+    different computation. Imports are local to avoid a cycle with
+    ``kernels/ops.py`` (which imports this package for ``impl="auto"``).
     """
     import time
 
@@ -122,31 +128,58 @@ def measure_workload(
     from repro.core.formats import BatchedCOO
     from repro.kernels.ops import batched_spmm
 
+    layer = w.channels is not None and w.n_in is not None
     if impls is None:
-        impls = tuple(i for i, _ in rank(w, allow_pallas=not interpret))
+        ranked = (rank_layer if layer else rank)(
+            w, allow_pallas=not interpret)
+        impls = tuple(i for i, _ in ranked)
 
     rng = np.random.default_rng(seed)
     dtype = jnp.bfloat16 if w.itemsize == 2 else jnp.float32
-    rid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
-    cid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
-    coo = BatchedCOO(
-        row_ids=jnp.asarray(rid), col_ids=jnp.asarray(cid),
-        values=jnp.asarray(rng.normal(size=(w.batch, w.nnz_pad)), dtype),
-        nnz=jnp.full((w.batch,), w.nnz_pad, jnp.int32),
-        n_rows=jnp.full((w.batch,), w.m_pad, jnp.int32))
-    b = jnp.asarray(rng.normal(size=(w.batch, w.m_pad, w.n_b)), dtype)
+
+    def make_coo():
+        rid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
+        cid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
+        return BatchedCOO(
+            row_ids=jnp.asarray(rid), col_ids=jnp.asarray(cid),
+            values=jnp.asarray(rng.normal(size=(w.batch, w.nnz_pad)), dtype),
+            nnz=jnp.full((w.batch,), w.nnz_pad, jnp.int32),
+            n_rows=jnp.full((w.batch,), w.m_pad, jnp.int32))
+
+    if layer:
+        from repro.core.graph_conv import graph_conv_batched
+
+        adj = [make_coo() for _ in range(w.channels)]
+        x = jnp.asarray(rng.normal(size=(w.batch, w.m_pad, w.n_in)), dtype)
+        params = {
+            "w": jnp.asarray(
+                rng.normal(size=(w.channels, w.n_in, w.n_b)), dtype),
+            "b": jnp.zeros((w.channels, w.n_b), dtype),
+        }
+
+        def make_fn(impl):
+            return jax.jit(functools.partial(
+                graph_conv_batched, impl=impl, k_pad=w.k_pad,
+                interpret=interpret)), (params, adj, x)
+    else:
+        coo, b = make_coo(), jnp.asarray(
+            rng.normal(size=(w.batch, w.m_pad, w.n_b)), dtype)
+
+        def make_fn(impl):
+            return jax.jit(functools.partial(
+                batched_spmm, impl=impl, k_pad=w.k_pad,
+                interpret=interpret)), (coo, b)
 
     times: dict[str, float] = {}
     for impl in impls:
-        fn = jax.jit(functools.partial(
-            batched_spmm, impl=impl, k_pad=w.k_pad, interpret=interpret))
+        fn, args = make_fn(impl)
         try:
             for _ in range(warmup):
-                jax.block_until_ready(fn(coo, b))
+                jax.block_until_ready(fn(*args))
             ts = []
             for _ in range(iters):
                 t0 = time.perf_counter()
-                jax.block_until_ready(fn(coo, b))
+                jax.block_until_ready(fn(*args))
                 ts.append(time.perf_counter() - t0)
             times[impl] = float(np.median(ts))
         except Exception:  # noqa: BLE001 — an impl a backend can't run is

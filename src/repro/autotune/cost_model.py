@@ -41,7 +41,13 @@ import dataclasses
 import functools
 
 from repro.analysis.roofline import HW
-from repro.core.batching import BatchPlan, plan_batched_gemm, plan_batched_spmm
+from repro.core.batching import (
+    CHUNK,
+    BatchPlan,
+    plan_batched_gemm,
+    plan_batched_spmm,
+    plan_fused_graph_conv,
+)
 
 # Overhead constants (seconds). These are *relative* knobs, not measurements:
 # the model only needs ordering, and the ordering is validated against the
@@ -51,7 +57,7 @@ OP_OVERHEAD = 2e-6       # one fused XLA op inside a jitted program
 SCAN_STEP_OVERHEAD = 2e-6  # one sequential scan iteration (the 'loop' path)
 GRID_STEP_OVERHEAD = 0.2e-6  # one Pallas grid step
 SCATTER_PENALTY = 3.0    # read-modify-write amplification of scatter-adds
-_COO_CHUNK = 128         # mirrors kernels/batched_spmm_coo.CHUNK
+_COO_CHUNK = CHUNK       # the COO/fused kernels' non-zero chunk (batching.py)
 
 
 def _mxu_eff(m: int, n: int) -> float:
@@ -66,6 +72,14 @@ class Workload:
     ``nnz_pad`` is the COO slot count per matrix (the density proxy: the
     planner and the kernels both pay for padded slots), ``k_pad`` the ELL
     slots per row or None when no ELL conversion is available.
+
+    A *graph-conv layer* workload additionally carries ``channels`` (edge
+    channels summed by the layer) and ``n_in`` (the X feature width feeding
+    the fused MatMul); both None means "plain SpMM call" and keeps the key
+    format unchanged. ``nnz_avg`` is the skew knob: the mean real non-zeros
+    per (sample × channel) when host metadata knows it — the fused kernel's
+    per-sample chunk loop pays for the MEAN, every other impl pays for the
+    padded max.
     """
 
     batch: int
@@ -74,12 +88,18 @@ class Workload:
     k_pad: int | None
     n_b: int
     itemsize: int = 4
+    channels: int | None = None
+    n_in: int | None = None
+    nnz_avg: int | None = None
 
     def key(self) -> str:
         """Stable string key for the persistent tuning cache (DESIGN.md §5)."""
         k = self.k_pad if self.k_pad is not None else 0
-        return (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
+        base = (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
                 f"_k{k}_n{self.n_b}_i{self.itemsize}")
+        if self.channels is not None:
+            base += f"_c{self.channels}_nin{self.n_in or 0}"
+        return base
 
     def shard(self, n_shards: int) -> "Workload":
         """The per-shard view of this workload on an ``n_shards``-way mesh:
@@ -165,6 +185,31 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
+    if impl == "fused":
+        # Fused graph-conv megakernel (DESIGN.md §7): per (matrix × panel)
+        # grid step, `channels` MXU feature transforms + one-hot-scatter
+        # SpMMs accumulate into one VMEM panel; intermediates never touch
+        # HBM and the nnz loop is skew-aware (mean chunks, not padded max).
+        if w.channels is None or w.n_in is None:
+            return float("inf")   # not a layer workload — fused can't run
+        plan = plan_fused_graph_conv(
+            batch=w.batch, m_pad=w.m_pad, n_in=w.n_in, n_out=w.n_b,
+            channels=w.channels, nnz_pad=w.nnz_pad, itemsize=w.itemsize)
+        if plan.case == 3:
+            return float("inf")
+        nnz_eff = w.nnz_avg if w.nnz_avg is not None else w.nnz_pad
+        chunks = max(1, -(-nnz_eff // _COO_CHUNK))
+        steps = w.batch * plan.p
+        flops = (2.0 * steps * w.channels * w.m_pad * plan.n_block
+                 * (w.n_in + chunks * _COO_CHUNK))
+        per_step = (w.m_pad * w.n_in * w.itemsize                   # X panel
+                    + w.channels * w.n_in * plan.n_block * w.itemsize  # W
+                    + w.channels * chunks * _COO_CHUNK * (8 + w.itemsize))
+        bytes_ = steps * per_step + out_bytes       # output written ONCE
+        eff = _mxu_eff(w.m_pad, plan.n_block)
+        return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
+                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
+
     if impl in ("dense", "pallas_gemm"):
         densify = 2.0 * w.batch * w.m_pad * w.m_pad * w.itemsize  # write+read
         flops = 2.0 * w.batch * w.m_pad * w.m_pad * w.n_b
@@ -193,5 +238,58 @@ def rank(w: Workload, *, allow_pallas: bool = True,
     if allow_pallas:
         candidates += ["pallas_ell", "pallas_coo", "pallas_gemm"]
     scored = [(i, estimate(w, i, hw)) for i in candidates]
+    scored = [(i, t) for i, t in scored if t != float("inf")]
+    return tuple(sorted(scored, key=lambda it: it[1]))
+
+
+def estimate_layer(w: Workload, impl: str, hw: HW = HW()) -> float:
+    """Estimated seconds for one WHOLE graph-conv layer (Fig. 7) on a
+    channels-aware workload: ``Y = Σ_ch A_ch·(X·W_ch + b_ch)``.
+
+    - ``impl="fused"``: the megakernel — one device op, no HBM intermediates
+      (priced by :func:`estimate`).
+    - any SpMM impl: the stacked fallback path — ONE (channels·batch) batched
+      SpMM call plus the dense feature-transform (MXU matmul, U written to
+      and re-read from HBM) and the channel sum, as separate XLA ops.
+    """
+    if w.channels is None or w.n_in is None:
+        raise ValueError(f"not a layer workload (channels/n_in unset): {w}")
+    if impl == "fused":
+        return estimate(w, "fused", hw)
+    stacked = dataclasses.replace(w, batch=w.batch * w.channels,
+                                  channels=None, n_in=None, nnz_avg=None)
+    t_spmm = estimate(stacked, impl, hw)
+    if t_spmm == float("inf"):
+        return t_spmm
+    ch, b = w.channels, w.batch
+    u_bytes = ch * b * w.m_pad * w.n_b * w.itemsize     # the HBM intermediate
+    x_bytes = b * w.m_pad * (w.n_in or 0) * w.itemsize
+    out_bytes = b * w.m_pad * w.n_b * w.itemsize
+    # MatMul+Add: read X (once; XLA keeps it hot across channels is optimistic
+    # — charge one read per layer), write U once per channel.
+    mm_flops = 2.0 * ch * b * w.m_pad * (w.n_in or 0) * w.n_b
+    t_mm = _roofline(mm_flops, x_bytes + u_bytes,
+                     hw.peak_flops * _mxu_eff(w.m_pad, w.n_b), hw)
+    # channel sum: read the `ch` SpMM outputs, write Y.
+    t_sum = _roofline(ch * b * w.m_pad * w.n_b,
+                      (ch + 1) * out_bytes, hw.peak_flops / 16.0, hw)
+    # op count: ch fused MatMul+Add ops + 1 stacked SpMM (inside t_spmm) +
+    # 1 channel-sum op.
+    return t_spmm + t_mm + t_sum + (ch + 1) * OP_OVERHEAD
+
+
+@functools.lru_cache(maxsize=4096)
+def rank_layer(w: Workload, *, allow_pallas: bool = True,
+               hw: HW = HW()) -> tuple[tuple[str, float], ...]:
+    """All runnable impls for a graph-conv LAYER workload, cheapest-first.
+
+    Candidates are the SpMM impls of :func:`rank` (each priced as the stacked
+    fallback layer) plus ``"fused"`` when Pallas is allowed — the megakernel
+    is Pallas-only, so the CPU/interpret posture never selects it.
+    """
+    candidates = ["ref", "ell", "dense", "loop"]
+    if allow_pallas:
+        candidates += ["pallas_ell", "pallas_coo", "pallas_gemm", "fused"]
+    scored = [(i, estimate_layer(w, i, hw)) for i in candidates]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))

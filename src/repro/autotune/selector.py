@@ -27,17 +27,31 @@ from __future__ import annotations
 import dataclasses
 
 from repro.analysis.roofline import HW
-from repro.autotune.cost_model import Workload, rank, spmm_plan
-from repro.core.batching import BatchPlan
+from repro.autotune.cost_model import Workload, rank, rank_layer, spmm_plan
+from repro.core.batching import BatchPlan, plan_fused_graph_conv
+
+
+def _layer_plan(w: Workload, impl: str) -> BatchPlan:
+    """The blocking plan a layer impl runs: the fused megakernel's own plan
+    for ``"fused"``, the stacked (channels·batch) SpMM plan otherwise."""
+    if impl == "fused":
+        return plan_fused_graph_conv(
+            batch=w.batch, m_pad=w.m_pad, n_in=w.n_in or 0, n_out=w.n_b,
+            channels=w.channels or 1, nnz_pad=w.nnz_pad, itemsize=w.itemsize)
+    return spmm_plan(dataclasses.replace(
+        w, batch=w.batch * (w.channels or 1), channels=None, n_in=None,
+        nnz_avg=None), impl)
 
 # impl string → kernel class, for tests and reporting: the class is the
 # decision the paper's policy makes; pallas-vs-XLA within a class is a
-# backend posture (allow_pallas), not a policy change.
+# backend posture (allow_pallas), not a policy change. "fused" is its own
+# class: the graph-conv layer megakernel (DESIGN.md §7).
 KINDS = {
     "ref": "scatter", "loop": "scatter",
     "ell": "ell", "pallas_ell": "ell",
     "pallas_coo": "coo",
     "dense": "gemm", "pallas_gemm": "gemm",
+    "fused": "fused",
 }
 
 
@@ -58,8 +72,14 @@ def forced_decision(w: Workload, impl: str, *, note: str = "") -> Decision:
     """The Decision for a caller-pinned concrete ``impl``: no ranking, but
     the same auditable plan/case fields as a model decision. Shared by the
     local (``kernels/ops.py``) and mesh-sharded (``distributed/spmm.py``)
-    resolution paths so the forced-path semantics cannot diverge."""
-    plan = spmm_plan(w, impl)
+    resolution paths so the forced-path semantics cannot diverge. A LAYER
+    workload (``channels``/``n_in`` set) reports the plan the layer impl
+    actually runs — the fused megakernel's own plan, or the stacked
+    (channels·batch) SpMM plan — not a bare per-channel SpMM plan."""
+    if w.channels is not None and w.n_in is not None:
+        plan = _layer_plan(w, impl)
+    else:
+        plan = spmm_plan(w, impl)
     return Decision(
         impl=impl, kind=KINDS.get(impl, impl), case=plan.case, plan=plan,
         scores=(), source="forced",
@@ -103,6 +123,52 @@ def select_impl(
         scores=scores, source="model",
         reason=f"cost model: {impl} @ {est:.2e}s (case {plan.case}, "
                f"p={plan.p}){runner_up}",
+    )
+
+
+def select_graph_conv_impl(
+    w: Workload,
+    *,
+    allow_pallas: bool = True,
+    cache=None,
+    hw: HW = HW(),
+) -> Decision:
+    """Resolve ``impl="auto"`` for one graph-conv LAYER workload
+    (``w.channels``/``w.n_in`` set): the candidates are every SpMM impl
+    priced as the stacked fallback layer plus the fused megakernel
+    (``cost_model.rank_layer``). Same precedence as :func:`select_impl`:
+    case-3 force → measured tuning-cache winner → model winner."""
+    if w.channels is None or w.n_in is None:
+        raise ValueError(f"not a layer workload (channels/n_in unset): {w}")
+    scores = rank_layer(w, allow_pallas=allow_pallas, hw=hw)
+    if spmm_plan(w).case == 3:          # case 3 depends only on m_pad
+        plan = spmm_plan(w, "ref")
+        return Decision(
+            impl="ref", kind="scatter", case=3, plan=plan, scores=scores,
+            source="forced",
+            reason=(f"m_pad={w.m_pad} > LARGE_M: paper case 3 — neither "
+                    "batching nor fusion pays, per-sample scatter-add "
+                    "fallback"),
+        )
+    allowed = {i for i, _ in scores}
+    if cache is not None:
+        measured = cache.best(w.key())
+        if measured in allowed:
+            plan = _layer_plan(w, measured)
+            return Decision(
+                impl=measured, kind=KINDS[measured], case=plan.case,
+                plan=plan, scores=scores, source="cache",
+                reason=f"measured winner for key {w.key()} (tuning cache)",
+            )
+    impl, est = scores[0]
+    plan = _layer_plan(w, impl)
+    runner_up = f"; runner-up {scores[1][0]} @ {scores[1][1]:.2e}s" \
+        if len(scores) > 1 else ""
+    return Decision(
+        impl=impl, kind=KINDS[impl], case=plan.case, plan=plan,
+        scores=scores, source="model",
+        reason=f"layer cost model: {impl} @ {est:.2e}s "
+               f"(channels={w.channels}, case {plan.case}){runner_up}",
     )
 
 

@@ -11,8 +11,10 @@ from repro.core.formats import (  # noqa: F401
 )
 from repro.core.batching import (  # noqa: F401
     BatchPlan,
+    chunk_counts,
     plan_batched_gemm,
     plan_batched_spmm,
+    plan_fused_graph_conv,
 )
 from repro.core.spmm import (  # noqa: F401
     IMPLS,

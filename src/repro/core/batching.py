@@ -30,6 +30,7 @@ VMEM_TILE_BUDGET = 4 * 1024 * 1024  # per-grid-step working set target
 LANES = 128                         # vector lane width (last dim tiling)
 SUBLANES = 8                        # second-to-last dim tiling (f32)
 LARGE_M = 8192                      # paper's case-3 threshold, kept verbatim
+CHUNK = 128                         # COO non-zero chunk (one MXU sublane tile)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -38,7 +39,18 @@ def _round_up(x: int, m: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class BatchPlan:
-    """Static blocking decision for one batched SpMM/GEMM call."""
+    """Static blocking decision for one batched SpMM/GEMM call.
+
+    ``sample_chunks`` is the skew-aware nnz packing decision for the fused
+    graph-conv path: per-sample CHUNK counts (``Σ_ch ceil(nnz_ch / CHUNK)``
+    — what the per-channel loop executes — batch-major), known only when
+    the planner saw host-side nnz metadata. ``None`` means "bound every
+    sample by the batch max" —
+    the pre-skew-aware behavior. The kernels themselves always take the
+    runtime per-(sample × channel) chunk-count array (trace-safe, derived
+    from ``BatchedCOO.nnz``); this field is the *static, auditable* record
+    of the same decision for the cost model, benchmarks and EXPERIMENTS.md.
+    """
 
     batch: int
     m_pad: int          # padded rows per matrix (multiple of SUBLANES)
@@ -47,10 +59,17 @@ class BatchPlan:
     p: int              # number of column panels = ceil(n_b / n_block)
     case: int           # 1, 2 or 3 (paper Fig. 5)
     bytes_per_step: int # VMEM working-set estimate per grid step
+    sample_chunks: tuple[int, ...] | None = None  # skew-aware per-sample chunks
 
     @property
     def grid(self) -> tuple[int, int]:
         return (self.batch, self.p)
+
+    @property
+    def max_chunks(self) -> int:
+        """Batch-max CHUNK count a skew-oblivious loop would run per sample
+        (``sample_chunks`` known only)."""
+        return max(self.sample_chunks) if self.sample_chunks else 0
 
 
 def plan_batched_spmm(
@@ -89,6 +108,82 @@ def plan_batched_spmm(
     p = -(-n_b // n_block)
     case = 1 if p == 1 else 2
     return BatchPlan(batch, m_pad, n_b, n_block, p, case, step)
+
+
+def chunk_counts(nnz_per_sample) -> tuple[int, ...]:
+    """Skew-aware packing: the CHUNK count the fused kernel actually runs per
+    sample, from host-side nnz metadata. Accepts per-sample totals (a
+    sequence of ints → ``ceil(nnz / CHUNK)`` each) or per-(sample × channel)
+    counts (a sequence of sequences → ``Σ_ch ceil(nnz_ch / CHUNK)``, which is
+    what the per-channel loop executes — ceils do NOT commute with the
+    channel sum). A zero-nnz sample runs zero chunks (the kernel writes its
+    zero output unconditionally)."""
+
+    def one(n):
+        try:
+            return sum(-(-int(c) // CHUNK) for c in n)
+        except TypeError:
+            return -(-int(n) // CHUNK)
+
+    return tuple(one(n) for n in nnz_per_sample)
+
+
+def plan_fused_graph_conv(
+    *,
+    batch: int,
+    m_pad: int,
+    n_in: int,
+    n_out: int,
+    channels: int,
+    nnz_pad: int,
+    itemsize: int = 4,
+    nnz_per_sample=None,
+) -> BatchPlan:
+    """Blocking plan for the fused graph-conv megakernel (DESIGN.md §7).
+
+    One grid step computes, for one (matrix × output-column panel), the whole
+    layer: ``channels`` MXU products ``X·W_ch + b_ch`` immediately consumed by
+    the one-hot-scatter SpMM, accumulated into a single VMEM-resident panel.
+    The per-step working set is therefore:
+
+        X panel      m_pad * n_in * itemsize
+        W panel      channels * n_in * n_block * itemsize
+        bias panel   channels * n_block * itemsize
+        indices      channels * nnz_chunks * CHUNK * (8 + itemsize)
+        acc/out      2 * m_pad * n_block * 4       (f32 accumulator + store)
+
+    ``nnz_per_sample`` (host-side: per-sample totals, or per-(sample ×
+    channel) rows for the exact sum-of-ceils — see :func:`chunk_counts`)
+    makes the plan skew-aware: ``sample_chunks`` records each graph's real
+    chunk count so the kernel's nnz loop — and the cost model — stop paying
+    for the batch-max ``nnz_pad`` on skewed batches.
+    """
+    m_pad = _round_up(max(m_pad, 1), SUBLANES)
+    sample_chunks = (chunk_counts(nnz_per_sample)
+                     if nnz_per_sample is not None else None)
+    if m_pad > LARGE_M:
+        # paper case 3: matrices this large do not batch — callers fall back
+        # to the unfused per-sample path, same as plan_batched_spmm.
+        return BatchPlan(batch, m_pad, n_out, n_out, 1, 3, 0, sample_chunks)
+
+    chunks_pad = max(1, -(-nnz_pad // CHUNK))
+    idx_bytes = channels * chunks_pad * CHUNK * (8 + itemsize)
+    x_bytes = m_pad * n_in * itemsize
+    n_block = _round_up(n_out, LANES) if n_out >= LANES else n_out
+
+    def step_bytes(nb: int) -> int:
+        return (x_bytes + channels * n_in * nb * itemsize
+                + channels * nb * itemsize + idx_bytes
+                + 2 * m_pad * nb * 4)
+
+    while n_block > LANES and step_bytes(n_block) > VMEM_TILE_BUDGET:
+        # halve along 128-lane multiples — the paper's "divide the output
+        # along the column" (Fig. 5-(b)/(d)) applied to the fused epilogue
+        n_block = _round_up(n_block // 2, LANES)
+    p = -(-n_out // n_block)
+    case = 1 if p == 1 else 2
+    return BatchPlan(batch, m_pad, n_out, n_block, p, case,
+                     step_bytes(n_block), sample_chunks)
 
 
 def plan_batched_gemm(

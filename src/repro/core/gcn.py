@@ -34,11 +34,13 @@ class GCNConfig:
     conv_widths: tuple[int, ...] = (64, 64)   # Tox21: two layers of 64
     n_tasks: int = 12             # Tox21: 12 binary tasks
     task: str = "multitask_binary"  # or "multiclass"
-    impl: str = "auto"            # SpMM implementation (repro.core.spmm.IMPLS;
-                                  # "auto" = adaptive dispatch, DESIGN.md §5)
+    impl: str = "auto"            # layer implementation (repro.core.spmm.IMPLS
+                                  # incl. the "fused" megakernel; "auto" =
+                                  # adaptive dispatch, DESIGN.md §5/§7)
     k_pad: int = 8                # max nnz/row for the ELL path
     batched: bool = True          # Fig. 7 (True) vs Fig. 6 (False)
-    interpret: bool = True
+    interpret: bool | None = None  # None → repro.kernels.default_interpret()
+                                   # ($REPRO_INTERPRET, auto-False on TPU)
 
     @staticmethod
     def tox21(**kw) -> "GCNConfig":

@@ -1,11 +1,22 @@
 """Graph convolution layer — paper Fig. 6 (non-batched) and Fig. 7 (batched).
 
 Semantics (paper §II-A, eq. (2)): Y = Σ_ch A_ch · (X · W_ch + bias_ch), summed
-over edge channels (bond types in ChemGCN). The two execution strategies are
-numerically identical; the batched one restructures the computation so MatMul,
-Add and SpMM each run as ONE device op per channel instead of one per
-(sample × channel) — the paper's O(channel·batchsize) → O(channel) kernel
-launch reduction.
+over edge channels (bond types in ChemGCN). The execution strategies are
+numerically identical and differ only in op structure:
+
+- ``graph_conv_nonbatched``  Fig. 6: one op per (sample × channel) — the
+  paper's O(channel·batchsize) launch baseline;
+- ``graph_conv_batched``     Fig. 7 and beyond. The SpMM impl resolves per
+  LAYER workload (``repro.autotune.select_graph_conv_impl``):
+
+  * ``impl="fused"`` — ONE device op for the whole layer: the Pallas
+    megakernel (``kernels/fused_graph_conv.py``, DESIGN.md §7) computes
+    X·W_ch + b_ch on the MXU, consumes it in-VMEM with the one-hot-scatter
+    SpMM, and accumulates the channel sum — no per-channel HBM
+    intermediates, nnz loop bounded by each graph's REAL non-zeros;
+  * any SpMM impl — the stacked fallback: the per-channel einsum and ALL
+    channels' SpMMs are stacked into one ``(channels·batch)`` batched call
+    (4·channels ops → 3 ops), then channel-summed.
 """
 from __future__ import annotations
 
@@ -16,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import BatchedCOO
 from repro.core.spmm import batched_spmm
+from repro.kernels import resolve_interpret
 from repro.kernels.ref import spmm_coo_single
 
 
@@ -29,6 +41,75 @@ def init_graph_conv(key, n_in: int, n_out: int, channels: int):
     }
 
 
+def stack_channels(adj: Sequence[BatchedCOO]):
+    """Stack per-channel BatchedCOOs into channel-axis arrays for the fused
+    kernel: (batch, channels, nnz_max) row/col/values + (batch, channels)
+    true nnz. Channels with a smaller nnz_pad are zero-padded (value 0.0,
+    index 0 — the §IV-C invariant)."""
+    nnz_max = max(a.nnz_pad for a in adj)
+
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, nnz_max - x.shape[1])))
+
+    rids = jnp.stack([pad(a.row_ids) for a in adj], axis=1)
+    cids = jnp.stack([pad(a.col_ids) for a in adj], axis=1)
+    vals = jnp.stack([pad(a.values) for a in adj], axis=1)
+    nnz = jnp.stack([a.nnz for a in adj], axis=1)
+    return rids, cids, vals, nnz
+
+
+def flatten_channels(adj: Sequence[BatchedCOO]) -> BatchedCOO:
+    """Concatenate the channel axis into the batch axis: one BatchedCOO of
+    ``channels·batch`` samples (channel-major), for the stacked fallback's
+    single ``(channels·batch)`` SpMM call."""
+    rids, cids, vals, nnz = stack_channels(adj)
+    batch, channels, nnz_pad = rids.shape
+
+    def flat(t):
+        return t.transpose(1, 0, 2).reshape(channels * batch, nnz_pad)
+
+    n_rows = jnp.tile(adj[0].n_rows, channels)
+    return BatchedCOO(row_ids=flat(rids), col_ids=flat(cids),
+                      values=flat(vals),
+                      nnz=nnz.transpose(1, 0).reshape(-1), n_rows=n_rows)
+
+
+def resolve_graph_conv_impl(
+    adj: Sequence[BatchedCOO],
+    x: jax.Array,
+    n_out: int,
+    *,
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+    mesh=None,
+    mesh_axis: str = "data",
+):
+    """Resolve ``impl`` against the LAYER workload of one graph-conv call.
+
+    Returns a :class:`repro.autotune.Decision`; candidates include the fused
+    megakernel next to every SpMM impl (each priced as the stacked fallback
+    layer). With ``mesh=``, resolution runs against the per-shard workload —
+    the shapes each device actually executes (DESIGN.md §6).
+    """
+    from repro import autotune
+
+    interpret = resolve_interpret(interpret)
+    batch, m_pad, n_in = x.shape
+    w = autotune.Workload(
+        batch=batch, m_pad=m_pad, nnz_pad=max(a.nnz_pad for a in adj),
+        k_pad=k_pad, n_b=n_out, itemsize=x.dtype.itemsize,
+        channels=len(adj), n_in=n_in)
+    if mesh is not None:
+        from repro.distributed.spmm import shard_count
+
+        w = w.shard(shard_count(mesh, mesh_axis))
+    if impl != "auto":
+        return autotune.forced_decision(w, impl)
+    return autotune.select_graph_conv_impl(
+        w, allow_pallas=not interpret, cache=autotune.default_cache())
+
+
 def graph_conv_batched(
     params,
     adj: Sequence[BatchedCOO],   # one BatchedCOO per channel, batch-leading
@@ -36,25 +117,62 @@ def graph_conv_batched(
     *,
     impl: str = "auto",
     k_pad: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     mesh=None,
+    epilogue: str = "none",
 ) -> jax.Array:
-    """Paper Fig. 7: per channel, one MatMul over the whole mini-batch
-    (the reshape to (m_X·batchsize, n_X) is implicit in the batched einsum),
-    one Add, one Batched SpMM; then the element-wise channel sum.
+    """Paper Fig. 7 and beyond: the whole mini-batch's layer in O(1) ops.
 
-    ``mesh=`` shards each channel's Batched SpMM over the mesh's ``"data"``
-    axis (DESIGN.md §6); the surrounding MatMul/Add/sum stay ordinary XLA ops
-    that GSPMD partitions around the sharded SpMM.
+    ``impl="auto"`` resolves per layer workload (fused megakernel vs stacked
+    SpMM classes); ``impl="fused"`` pins the megakernel; any SpMM impl pins
+    the stacked fallback with that kernel. ``epilogue`` ("none"|"relu") is
+    applied inside the fused kernel when it runs, as an XLA op otherwise —
+    identical numerics either way.
+
+    ``mesh=`` shards the batch axis over the mesh's ``"data"`` axis
+    (DESIGN.md §6): the fused megakernel dispatches per shard via
+    ``distributed.spmm.sharded_fused_graph_conv``; the fallback's stacked
+    SpMM runs through ``sharded_batched_spmm`` with the dense ops GSPMD
+    partitions around it.
     """
-    y = None
-    for ch, a_ch in enumerate(adj):
-        u = jnp.einsum("bmn,nf->bmf", x, params["w"][ch])      # MATMUL (one op)
-        u = u + params["b"][ch]                                 # ADD (one op)
-        c = batched_spmm(a_ch, u, impl=impl, k_pad=k_pad,
-                         interpret=interpret, mesh=mesh)        # BATCHEDSPMM
-        y = c if y is None else y + c                           # ELEMENTWISEADD
-    return y
+    interpret = resolve_interpret(interpret)
+    channels = len(adj)
+    n_out = params["w"].shape[-1]
+    concrete = impl
+    if impl == "auto":
+        concrete = resolve_graph_conv_impl(
+            adj, x, n_out, impl="auto", k_pad=k_pad, interpret=interpret,
+            mesh=mesh).impl
+
+    if concrete == "fused":
+        rids, cids, vals, nnz = stack_channels(adj)
+        if mesh is not None:
+            from repro.distributed.spmm import sharded_fused_graph_conv
+
+            return sharded_fused_graph_conv(
+                rids, cids, vals, nnz, x, params["w"], params["b"],
+                mesh=mesh, epilogue=epilogue, interpret=interpret)
+        from repro.kernels.fused_graph_conv import fused_graph_conv
+
+        return fused_graph_conv(rids, cids, vals, nnz, x,
+                                params["w"], params["b"],
+                                epilogue=epilogue, interpret=interpret)
+
+    # Stacked fallback: ONE feature-transform einsum over all channels, ONE
+    # (channels·batch) Batched SpMM, one channel-sum — 4·channels ops → 3.
+    # On a mesh with impl="auto", keep "auto" so the sharded path re-resolves
+    # against the per-shard stacked workload it actually runs (DESIGN.md §6);
+    # otherwise pin the layer-resolved (or caller-pinned) impl.
+    spmm_impl = "auto" if impl == "auto" and mesh is not None else concrete
+    batch, m_pad = x.shape[0], x.shape[1]
+    u = jnp.einsum("bmn,cnf->cbmf", x, params["w"]) \
+        + params["b"][:, None, None, :]                 # MATMUL+ADD (one op)
+    a_flat = flatten_channels(adj)
+    c = batched_spmm(a_flat, u.reshape(channels * batch, m_pad, n_out),
+                     impl=spmm_impl, k_pad=k_pad, interpret=interpret,
+                     mesh=mesh)                          # BATCHEDSPMM (one op)
+    y = jnp.sum(c.reshape(channels, batch, m_pad, n_out), axis=0)  # SUM
+    return jnp.maximum(y, 0.0) if epilogue == "relu" else y
 
 
 def graph_conv_nonbatched(
@@ -66,9 +184,7 @@ def graph_conv_nonbatched(
     scan over the batch so it reproduces the launch-per-sample structure that
     the paper measures as the baseline."""
     channels = len(adj)
-    rids = jnp.stack([a.row_ids for a in adj], 1)   # (batch, ch, nnz_pad)
-    cids = jnp.stack([a.col_ids for a in adj], 1)
-    vals = jnp.stack([a.values for a in adj], 1)
+    rids, cids, vals, _ = stack_channels(adj)       # (batch, ch, nnz_max)
 
     def per_sample(_, args):
         rid, cid, val, xb = args                     # one mini-batch sample

@@ -28,20 +28,20 @@ BatchedCOO leaves are batch-leading arrays, so the specs are uniform
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.formats import BatchedCOO
+from repro.kernels import resolve_interpret
 
 __all__ = [
     "pad_batch",
     "resolve_sharded_impl",
     "shard_count",
     "sharded_batched_spmm",
+    "sharded_fused_graph_conv",
 ]
 
 
@@ -87,7 +87,7 @@ def resolve_sharded_impl(
     axis: str = "data",
     impl: str = "auto",
     k_pad: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Resolve ``impl`` against the PER-SHARD workload shapes.
 
@@ -97,6 +97,7 @@ def resolve_sharded_impl(
     """
     from repro import autotune
 
+    interpret = resolve_interpret(interpret)
     n = shard_count(mesh, axis)
     batch, m_pad, n_b = b.shape
     w = autotune.Workload(batch=batch, m_pad=m_pad,
@@ -116,7 +117,7 @@ def sharded_batched_spmm(
     axis: str = "data",
     impl: str = "auto",
     k_pad: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """C[s] = A[s] @ B[s] with the batch axis sharded over ``mesh[axis]``.
 
@@ -127,6 +128,7 @@ def sharded_batched_spmm(
     """
     from repro.kernels.ops import _forward, batched_spmm, bwd_impl_for, dvalues
 
+    interpret = resolve_interpret(interpret)
     n = shard_count(mesh, axis)
     if n == 1:
         return batched_spmm(a, b, impl=impl, k_pad=k_pad, interpret=interpret)
@@ -177,4 +179,109 @@ def sharded_batched_spmm(
 
     f.defvjp(fwd, bwd)
     out = f(a.values, b)
+    return out[:batch] if pad else out
+
+
+def sharded_fused_graph_conv(
+    row_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    col_ids: jax.Array,
+    values: jax.Array,
+    nnz: jax.Array,         # (batch, channels) int32
+    x: jax.Array,           # (batch, m_pad, n_in)
+    w: jax.Array,           # (channels, n_in, n_out) — replicated
+    bias: jax.Array,        # (channels, n_out) — replicated
+    *,
+    mesh: Mesh,
+    axis: str = "data",
+    epilogue: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The fused graph-conv megakernel (DESIGN.md §7) with the batch axis
+    sharded over ``mesh[axis]``: each shard runs ONE fused ``pallas_call``
+    for its slice of the batch — per-shard fused dispatch.
+
+    Same structure as :func:`sharded_batched_spmm`: zero-nnz batch padding,
+    custom VJP outside the shard_map, batch-sharded dValues/dX. The layer
+    parameters ``w``/``bias`` enter replicated, so their gradients are
+    psum-reduced over the batch shards inside the backward shard_map and
+    come out replicated — exactly the all-reduce GSPMD would insert for the
+    unfused path's dense MatMul.
+    """
+    from repro.core.batching import plan_fused_graph_conv
+    from repro.kernels.fused_graph_conv import (
+        fused_bwd,
+        fused_forward,
+        fused_graph_conv,
+        runtime_chunks,
+    )
+    from repro.kernels.ops import bwd_impl_for
+
+    interpret = resolve_interpret(interpret)
+    n = shard_count(mesh, axis)
+    if n == 1:
+        return fused_graph_conv(row_ids, col_ids, values, nnz, x, w, bias,
+                                epilogue=epilogue, interpret=interpret)
+
+    batch, channels, nnz_pad = row_ids.shape
+    m_pad, n_in = x.shape[1], x.shape[2]
+    n_out = w.shape[-1]
+    pad = (-batch) % n
+    if pad:
+        # §IV-C padding invariant: zero-nnz samples contribute nothing and
+        # their runtime chunk count is 0, so the skew-aware loop never runs
+        def padb(t):
+            return jnp.concatenate(
+                [t, jnp.zeros((pad,) + t.shape[1:], t.dtype)], axis=0)
+
+        row_ids, col_ids, values, nnz, x = map(
+            padb, (row_ids, col_ids, values, nnz, x))
+    plan = plan_fused_graph_conv(
+        batch=(batch + pad) // n, m_pad=m_pad, n_in=n_in, n_out=n_out,
+        channels=channels, nnz_pad=nnz_pad, itemsize=x.dtype.itemsize)
+    if plan.case == 3:
+        raise ValueError(
+            f"m_pad={plan.m_pad} is planner case 3 (> LARGE_M): use the "
+            "unfused graph_conv_batched fallback")
+    chunks = runtime_chunks(nnz)
+    bwd_impl = bwd_impl_for("fused") if not interpret else "ref"
+
+    spec, repl = P(axis), P()
+    rids, cids = row_ids, col_ids
+
+    def _fwd_local(rids_l, cids_l, vals_l, chunks_l, x_l, w_l, b_l):
+        return fused_forward(rids_l, cids_l, vals_l, chunks_l, x_l, w_l, b_l,
+                             None, plan=plan, epilogue=epilogue,
+                             interpret=interpret)
+
+    fwd_sharded = shard_map(
+        _fwd_local, mesh=mesh, in_specs=(spec,) * 5 + (repl, repl),
+        out_specs=spec, check_rep=False)
+
+    def _bwd_local(rids_l, cids_l, vals_l, x_l, w_l, b_l, y_l, dy_l):
+        dvals, dx, dw, db, _ = fused_bwd(
+            rids_l, cids_l, vals_l, x_l, w_l, b_l, y_l, dy_l,
+            epilogue=epilogue, interpret=interpret, has_residual=False,
+            bwd_impl=bwd_impl)
+        # replicated params: all-reduce their grads over the batch shards
+        return dvals, dx, jax.lax.psum(dw, axis), jax.lax.psum(db, axis)
+
+    bwd_sharded = shard_map(
+        _bwd_local, mesh=mesh,
+        in_specs=(spec,) * 4 + (repl, repl) + (spec, spec),
+        out_specs=(spec, spec, repl, repl), check_rep=False)
+
+    @jax.custom_vjp
+    def f(vals, xx, ww, bb):
+        return fwd_sharded(rids, cids, vals, chunks, xx, ww, bb)
+
+    def fwd(vals, xx, ww, bb):
+        y = f(vals, xx, ww, bb)
+        return y, (vals, xx, ww, bb, y)
+
+    def bwd(res, dy):
+        vals, xx, ww, bb, y = res
+        return bwd_sharded(rids, cids, vals, xx, ww, bb, y, dy)
+
+    f.defvjp(fwd, bwd)
+    out = f(values, x, w, bias)
     return out[:batch] if pad else out

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.batching import BatchPlan
+from repro.kernels import resolve_interpret
 
 
 def _kernel(a_ref, b_ref, c_ref):
@@ -31,8 +32,9 @@ def batched_gemm(
     b: jax.Array,         # (batch, k, n)
     *,
     plan: BatchPlan,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     batch, m_pad, k = a.shape
     n = b.shape[-1]
     n_block, p = plan.n_block, plan.p

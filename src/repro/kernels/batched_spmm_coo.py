@@ -24,9 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.batching import BatchPlan
-
-CHUNK = 128
+from repro.core.batching import CHUNK, BatchPlan
+from repro.kernels import resolve_interpret
 
 
 def _kernel(rid_ref, cid_ref, val_ref, b_ref, c_ref, *, m_pad: int, chunks: int):
@@ -60,8 +59,9 @@ def batched_spmm_coo(
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     batch, nnz_pad = row_ids.shape
     m_pad, n_b = b.shape[1], b.shape[2]
     assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan

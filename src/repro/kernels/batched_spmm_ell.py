@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.batching import BatchPlan
+from repro.kernels import resolve_interpret
 
 
 def _kernel(cid_ref, val_ref, b_ref, c_ref, *, k_pad: int):
@@ -47,8 +48,9 @@ def batched_spmm_ell(
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     batch, m_pad, k_pad = col_ids.shape
     n_b = b.shape[-1]
     assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan

@@ -89,8 +89,10 @@ def flash_attention(
     window: int = 0,
     q_block: int = 128,
     kv_block: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     b, tq, h, hd = q.shape
     tk, kv = k.shape[1], k.shape[2]
     groups = h // kv

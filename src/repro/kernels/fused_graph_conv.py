@@ -1,0 +1,275 @@
+"""Fused graph-conv megakernel with skew-aware nnz packing (DESIGN.md §7).
+
+One Pallas grid step computes, for one (matrix × output-column panel), the
+ENTIRE Fig. 7 layer ``Y = Σ_ch A_ch · (X·W_ch + b_ch)`` plus an optional
+ReLU/residual epilogue:
+
+- the feature transform ``X·W_ch + b_ch`` runs on the MXU and its product
+  ``U_ch`` never leaves VMEM — the unfused path's per-channel
+  ``(batch, m_pad, n_out)`` MatMul/Add intermediates, which each round-trip
+  through HBM, disappear;
+- ``U_ch`` is immediately consumed by the one-hot-scatter SpMM of
+  ``batched_spmm_coo.py`` (atomics → MXU contraction, DESIGN.md §2);
+- the channel sum accumulates in a single f32 VMEM accumulator, written to
+  HBM exactly once per panel.
+
+Device-op structure per layer: 4·channels ops (MatMul, Add, Batched SpMM,
+channel-sum per edge channel) → ONE ``pallas_call`` — the paper's
+O(channel·batchsize) → O(channel) launch reduction taken the rest of the way
+to O(1), in the spirit of GE-SpMM/Accel-GCN's fused aggregation stage.
+
+**Skew-aware nnz packing**: the per-channel non-zero loop is bounded by each
+graph's REAL chunk count (``ceil(nnz[s, ch] / CHUNK)``, read from SMEM) rather
+than the batch-max ``nnz_pad`` — on a skewed batch the padded slots the COO
+kernel multiplies by 0.0 are simply never visited. The static, auditable side
+of the same decision lives in ``BatchPlan.sample_chunks``
+(``core/batching.plan_fused_graph_conv``).
+
+The custom VJP recomputes ``U_ch`` (cheap: one einsum) instead of storing it,
+runs dU = A_chᵀ·dZ as ONE channel-stacked batched SpMM, and reduces
+dW/db/dX with dense contractions — so training through the fused layer keeps
+the same batched-op structure as the forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.batching import CHUNK, BatchPlan, plan_fused_graph_conv
+from repro.kernels import resolve_interpret
+
+EPILOGUES = ("none", "relu")
+
+
+def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
+            *rest, channels: int, total_chunks: int, epilogue: str,
+            has_residual: bool):
+    if has_residual:
+        res_ref, c_ref = rest
+    else:
+        (c_ref,) = rest
+    m_pad = c_ref.shape[1]
+    xx = x_ref[0].astype(jnp.float32)                     # (m_pad, n_in)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, m_pad), 1)
+    acc = jnp.zeros(c_ref.shape[1:], jnp.float32)
+
+    for ch in range(channels):    # static unroll; channels is small (bond types)
+        # feature transform on the MXU — U_ch never leaves VMEM
+        u = jax.lax.dot_general(
+            xx, w_ref[ch].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + b_ref[ch].astype(jnp.float32)[None, :]
+
+        def body(i, a, u=u, ch=ch):
+            sl = pl.dslice(i * CHUNK, CHUNK)
+            rid = rid_ref[0, ch, sl]                      # (CHUNK,)
+            cid = cid_ref[0, ch, sl]
+            val = val_ref[0, ch, sl].astype(jnp.float32)
+            g = jnp.take(u, cid, axis=0) * val[:, None]
+            p1 = (rid[:, None] == row_iota).astype(jnp.float32)
+            # scatter-add as MXU contraction (DESIGN.md §2)
+            return a + jax.lax.dot_general(
+                p1, g, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+        # skew-aware bound: this graph's real chunk count, not the batch max
+        n_ch = jnp.minimum(chunks_ref[0, ch], total_chunks)
+        acc = jax.lax.fori_loop(0, n_ch, body, acc)
+
+    if has_residual:
+        acc = acc + res_ref[0].astype(jnp.float32)
+    if epilogue == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    c_ref[0] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "epilogue", "interpret"))
+def fused_forward(
+    row_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    col_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    values: jax.Array,      # (batch, channels, nnz_pad)
+    chunks: jax.Array,      # (batch, channels) int32 — real CHUNK counts
+    x: jax.Array,           # (batch, m_pad, n_in)
+    w: jax.Array,           # (channels, n_in, n_out)
+    bias: jax.Array,        # (channels, n_out)
+    residual: jax.Array | None = None,   # (batch, m_pad, n_out)
+    *,
+    plan: BatchPlan,
+    epilogue: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Raw fused forward (no VJP) — shared by the local custom-VJP wrapper and
+    the mesh-sharded per-shard dispatch (``distributed/spmm.py``)."""
+    interpret = resolve_interpret(interpret)
+    if epilogue not in EPILOGUES:
+        raise ValueError(f"epilogue={epilogue!r}; expected one of {EPILOGUES}")
+    batch, channels, nnz_pad = row_ids.shape
+    m_pad, n_in = x.shape[1], x.shape[2]
+    n_out = w.shape[-1]
+    assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_out, \
+        (plan, row_ids.shape, x.shape, w.shape)
+
+    if nnz_pad % CHUNK:
+        pad = CHUNK - nnz_pad % CHUNK
+        # padded rid points past the one-hot range so the slots are inert even
+        # structurally; padded values are 0.0 anyway
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, 0), (0, pad)),
+                          constant_values=m_pad)
+        col_ids = jnp.pad(col_ids, ((0, 0), (0, 0), (0, pad)))
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, pad)))
+        nnz_pad += pad
+    total_chunks = nnz_pad // CHUNK
+
+    n_block, p = plan.n_block, plan.p
+    if n_out % n_block:
+        padc = p * n_block - n_out
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, padc)))
+        bias = jnp.pad(bias, ((0, 0), (0, padc)))
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, 0), (0, 0), (0, padc)))
+
+    in_specs = [
+        pl.BlockSpec((1, channels), lambda i, j: (i, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, channels, nnz_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, channels, nnz_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, channels, nnz_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, m_pad, n_in), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((channels, n_in, n_block), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((channels, n_block), lambda i, j: (0, j)),
+    ]
+    operands = [chunks.astype(jnp.int32), row_ids, col_ids, values, x, w, bias]
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((1, m_pad, n_block),
+                                     lambda i, j: (i, 0, j)))
+        operands.append(residual)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, channels=channels, total_chunks=total_chunks,
+            epilogue=epilogue, has_residual=residual is not None),
+        grid=(batch, p),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[..., :n_out]
+
+
+def runtime_chunks(nnz: jax.Array) -> jax.Array:
+    """Trace-safe skew-aware chunk counts: ``ceil(nnz / CHUNK)`` per
+    (sample × channel), from the BatchedCOO ``nnz`` metadata."""
+    return ((nnz + CHUNK - 1) // CHUNK).astype(jnp.int32)
+
+
+def fused_bwd(rids, cids, values, x, w, bias, y, dy, *,
+              epilogue: str, interpret: bool, has_residual: bool,
+              bwd_impl: str):
+    """Backward through the fused layer, shared by the local custom VJP and
+    the mesh-sharded per-shard backward.
+
+    dZ = dY masked by the epilogue; dU_ch = A_chᵀ·dZ runs as ONE
+    channel-stacked batched SpMM (indices swapped — free in COO, §IV-D);
+    dValues is the batched gather-dot against the recomputed U_ch; dX/dW/db
+    are dense contractions of dU. Returns (dvalues, dx, dw, db, dresidual).
+    Like the unfused VJP, dValues is taken over every slot (padded slots
+    carry value 0.0, so the linearization point is identical).
+    """
+    from repro.kernels.ops import _forward, dvalues
+
+    batch, channels, nnz_pad = rids.shape
+    m_pad = x.shape[1]
+    n_out = w.shape[-1]
+    f32 = jnp.float32
+    dy = dy.astype(f32)
+    dz = dy * (y > 0) if epilogue == "relu" else dy
+    dres = dz if has_residual else None
+
+    # channel-major stacking: one (channels·batch) batched call, not a loop
+    def flat(t):
+        return t.transpose(1, 0, 2).reshape(channels * batch, -1)
+
+    rids_f, cids_f, vals_f = flat(rids), flat(cids), flat(values)
+    dz_f = jnp.broadcast_to(
+        dz[None], (channels, batch, m_pad, n_out)
+    ).reshape(channels * batch, m_pad, n_out)
+    nnz_f = jnp.full((channels * batch,), nnz_pad, jnp.int32)
+
+    du_f = _forward(cids_f, rids_f, nnz_f, vals_f, dz_f,
+                    impl=bwd_impl, k_pad=None, interpret=interpret)
+    u = jnp.einsum("bmn,cnf->cbmf", x.astype(f32), w.astype(f32)) \
+        + bias.astype(f32)[:, None, None, :]
+    dvals_f = dvalues(rids_f, cids_f, dz_f,
+                      u.reshape(channels * batch, m_pad, n_out))
+    dvals = dvals_f.reshape(channels, batch, nnz_pad).transpose(1, 0, 2)
+    du = du_f.astype(f32).reshape(channels, batch, m_pad, n_out)
+    dx = jnp.einsum("cbmf,cnf->bmn", du, w.astype(f32))
+    dw = jnp.einsum("bmn,cbmf->cnf", x.astype(f32), du)
+    db = jnp.sum(du, axis=(1, 2))
+    return (dvals.astype(values.dtype), dx.astype(x.dtype),
+            dw.astype(w.dtype), db.astype(bias.dtype), dres)
+
+
+def fused_graph_conv(
+    row_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    col_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    values: jax.Array,      # (batch, channels, nnz_pad)
+    nnz: jax.Array,         # (batch, channels) int32 — true nnz per channel
+    x: jax.Array,           # (batch, m_pad, n_in)
+    w: jax.Array,           # (channels, n_in, n_out)
+    bias: jax.Array,        # (channels, n_out)
+    *,
+    plan: BatchPlan | None = None,
+    epilogue: str = "none",
+    residual: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Y = epilogue(Σ_ch A_ch·(X·W_ch + b_ch) [+ residual]) in ONE device op.
+
+    Differentiable in ``values``, ``x``, ``w``, ``bias`` and ``residual``.
+    ``plan=None`` builds the blocking plan from the call's static shapes
+    (``core/batching.plan_fused_graph_conv``); pass a plan with
+    ``sample_chunks`` when host-side nnz metadata is available so the
+    packing decision is recorded statically too.
+    """
+    interpret = resolve_interpret(interpret)
+    batch, channels, nnz_pad = row_ids.shape
+    if plan is None:
+        plan = plan_fused_graph_conv(
+            batch=batch, m_pad=x.shape[1], n_in=x.shape[2], n_out=w.shape[-1],
+            channels=channels, nnz_pad=nnz_pad, itemsize=x.dtype.itemsize)
+    if plan.case == 3:
+        raise ValueError(
+            f"m_pad={plan.m_pad} is planner case 3 (> LARGE_M): the fused "
+            "megakernel does not batch matrices this large — use the unfused "
+            "graph_conv_batched fallback")
+    chunks = runtime_chunks(nnz)
+    from repro.kernels.ops import bwd_impl_for
+    bwd_impl = bwd_impl_for("fused") if not interpret else "ref"
+    has_res = residual is not None
+    rids, cids = row_ids, col_ids
+
+    @jax.custom_vjp
+    def f(values, x, w, bias, residual):
+        return fused_forward(rids, cids, values, chunks, x, w, bias, residual,
+                             plan=plan, epilogue=epilogue, interpret=interpret)
+
+    def fwd(values, x, w, bias, residual):
+        y = f(values, x, w, bias, residual)
+        return y, (values, x, w, bias, y)
+
+    def bwd(res_, dy):
+        values, xx, ww, bb, y = res_
+        dvals, dx, dw, db, dres = fused_bwd(
+            rids, cids, values, xx, ww, bb, y, dy, epilogue=epilogue,
+            interpret=interpret, has_residual=has_res, bwd_impl=bwd_impl)
+        return dvals, dx, dw, db, (dres if has_res else None)
+
+    f.defvjp(fwd, bwd)
+    return f(values, x, w, bias, residual)

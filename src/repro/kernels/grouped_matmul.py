@@ -57,13 +57,15 @@ def grouped_matmul(
     tm: int = 128,
     tn: int = 128,
     max_groups_per_tile: int = 4,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """out[i] = x[i] @ w[group_of(i)] with rows pre-sorted by group.
 
     ``max_groups_per_tile`` bounds how many group boundaries may cross one
     row tile (static unroll); with capacity-style dispatch sizes it is ≤ 2.
     """
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     e, _, n = w.shape
     mp = -(-m // tm) * tm

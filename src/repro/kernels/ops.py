@@ -31,13 +31,17 @@ import jax.numpy as jnp
 
 from repro.core import batching
 from repro.core.formats import BatchedCOO, coo_to_dense, coo_to_ell
-from repro.kernels import ref
+from repro.kernels import ref, resolve_interpret
 from repro.kernels.batched_gemm import batched_gemm
 from repro.kernels.batched_spmm_coo import batched_spmm_coo
 from repro.kernels.batched_spmm_ell import batched_spmm_ell
 
+# "fused" is the graph-conv layer megakernel (kernels/fused_graph_conv.py):
+# it is selectable wherever a layer-level workload is being resolved
+# (graph_conv_batched / resolve_graph_conv_impl), but is NOT a plain SpMM —
+# batched_spmm(impl="fused") raises with a pointer to the layer entry point.
 IMPLS = ("auto", "ref", "ell", "pallas_ell", "pallas_coo", "dense",
-         "pallas_gemm", "loop")
+         "pallas_gemm", "loop", "fused")
 
 
 def resolve_impl(
@@ -46,7 +50,7 @@ def resolve_impl(
     *,
     impl: str = "auto",
     k_pad: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Resolve ``impl="auto"`` to the concrete impl for this call's shapes.
 
@@ -56,6 +60,7 @@ def resolve_impl(
     """
     from repro import autotune
 
+    interpret = resolve_interpret(interpret)
     batch, m_pad, n_b = b.shape
     if impl != "auto":
         w = autotune.Workload(batch=batch, m_pad=m_pad,
@@ -120,9 +125,11 @@ def bwd_impl_for(impl: str) -> str:
     """The impl the backward pass (dB = Aᵀ @ dC) runs for a forward ``impl``.
 
     Aᵀ loses the per-row ELL bound, so ELL-class forwards fall back to the
-    COO/scatter class; shared by the local and the mesh-sharded VJP.
+    COO/scatter class; shared by the local and the mesh-sharded VJP. The
+    fused megakernel's dU = Aᵀ·dZ is itself a plain batched SpMM, so it
+    takes the same COO-class backward.
     """
-    if impl.startswith("pallas"):
+    if impl.startswith("pallas") or impl == "fused":
         return "pallas_coo"
     return impl if impl in ("ref", "loop", "dense") else "ref"
 
@@ -144,7 +151,7 @@ def batched_spmm(
     *,
     impl: str = "auto",
     k_pad: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     mesh=None,
     mesh_axis: str = "data",
 ) -> jax.Array:
@@ -160,6 +167,13 @@ def batched_spmm(
     split over ``mesh_axis`` and the per-shard kernels run under shard_map,
     with ``impl="auto"`` resolved against the per-shard workload.
     """
+    if impl == "fused":
+        raise ValueError(
+            "impl='fused' is the graph-conv LAYER megakernel (it needs W and "
+            "bias, not a bare dense operand) — call "
+            "repro.core.graph_conv.graph_conv_batched(impl='fused') or "
+            "repro.kernels.fused_graph_conv.fused_graph_conv directly")
+    interpret = resolve_interpret(interpret)
     if mesh is not None:
         from repro.distributed.spmm import sharded_batched_spmm
 
@@ -194,7 +208,7 @@ def batched_spmm(
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dense_batched_matmul(a, b, *, interpret: bool = True):
+def dense_batched_matmul(a, b, *, interpret: bool | None = None):
     """Standalone MXU batched GEMM entry point (benchmark use)."""
     plan = batching.plan_batched_gemm(
         batch=a.shape[0], m=a.shape[1], n=b.shape[-1], k=a.shape[2],

@@ -140,10 +140,14 @@ class GraphServeEngine:
 
     Requests are padded to fixed wave geometry (``batch`` slots, ``m_pad``
     node rows) so every wave hits the SAME jitted program — one compilation
-    total, one batched device op per (channel × conv layer) per wave. Empty
-    slots carry zero-nnz adjacencies and contribute nothing (the padding
-    invariant of §IV-C). The SpMM kernel per workload shape is chosen by
-    ``cfg.impl`` — ``"auto"`` resolves via repro.autotune at trace time.
+    total, and per (conv layer × wave) either ONE fused megakernel op
+    (``impl="fused"``/auto-selected, DESIGN.md §7) or one stacked
+    (channels·batch) Batched SpMM. Empty slots carry zero-nnz adjacencies
+    and contribute nothing (the padding invariant of §IV-C) — under the
+    fused kernel's skew-aware packing they cost zero nnz chunks too, so a
+    part-full final wave does not pay for its empty slots. The layer impl
+    per workload shape is chosen by ``cfg.impl`` — ``"auto"`` resolves via
+    repro.autotune at trace time; :meth:`layer_decision` exposes the choice.
     """
 
     def __init__(self, params, cfg: GCNConfig, *, batch: int = 32,
@@ -164,6 +168,25 @@ class GraphServeEngine:
     def _rebuild(adj_arrays):
         from repro.core.formats import BatchedCOO
         return [BatchedCOO(*a) for a in adj_arrays]
+
+    def layer_decision(self):
+        """The adaptive layer decision for this engine's (fixed) wave
+        geometry — fused megakernel vs stacked SpMM — for the first conv
+        layer. Audit/ops visibility; the jitted apply resolves identically."""
+        from repro.core.formats import BatchedCOO
+        from repro.core.graph_conv import resolve_graph_conv_impl
+
+        z2 = jnp.zeros((self.batch, self.nnz_pad), jnp.int32)
+        adj = [BatchedCOO(z2, z2, z2.astype(jnp.float32),
+                          jnp.zeros((self.batch,), jnp.int32),
+                          jnp.full((self.batch,), self.m_pad, jnp.int32))
+               for _ in range(self.cfg.channels)]
+        x = jnp.zeros((self.batch, self.m_pad, self.cfg.n_features),
+                      jnp.float32)
+        return resolve_graph_conv_impl(
+            adj, x, self.cfg.conv_widths[0], impl=self.cfg.impl,
+            k_pad=self.cfg.k_pad, interpret=self.cfg.interpret,
+            mesh=self.mesh)
 
     def _validate(self, s: int, r: GraphRequest) -> None:
         if r.n_nodes > self.m_pad:

@@ -163,6 +163,19 @@ class GCNTrainer:
 
         self._step = step
 
+    def layer_decision(self, batch: dict):
+        """The adaptive layer decision (``repro.autotune.Decision``) for one
+        training batch's first conv layer — fused megakernel vs stacked SpMM
+        (DESIGN.md §5/§7) — resolved exactly as the jitted step will resolve
+        it (per-shard workload when the trainer is mesh-parallel). Audit /
+        logging only; the step itself resolves at trace time."""
+        from repro.core.graph_conv import resolve_graph_conv_impl
+
+        return resolve_graph_conv_impl(
+            batch["adj"], batch["x"], self.cfg.conv_widths[0],
+            impl=self.cfg.impl, k_pad=self.cfg.k_pad,
+            interpret=self.cfg.interpret, mesh=self.mesh)
+
     def init_state(self):
         params = init_gcn(jax.random.key(self.tcfg.seed), self.cfg)
         state = adam_init(params)
