@@ -10,10 +10,17 @@ roofline (EXPERIMENTS.md §Roofline), not wall-clocked.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import numpy as np
+
+# Every row() lands here too, so drivers can persist a suite's rows as a
+# machine-readable BENCH_*.json (repo root) — the cross-PR perf trajectory.
+RESULTS: list[dict] = []
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -30,7 +37,32 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived})
 
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def results_snapshot() -> int:
+    """Marker into RESULTS; pair with ``write_bench_json(..., start=...)``."""
+    return len(RESULTS)
+
+
+def write_bench_json(suite: str, *, start: int = 0,
+                     extra: dict | None = None,
+                     path: pathlib.Path | None = None) -> pathlib.Path:
+    """Persist rows[start:] as ``BENCH_<suite>.json`` at the repo root —
+    machine-readable across PRs (name/us_per_call/derived per row, plus any
+    ``extra`` structured payload a harness wants to attach)."""
+    path = path or REPO_ROOT / f"BENCH_{suite}.json"
+    payload = {
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "rows": RESULTS[start:],
+    }
+    if extra:
+        payload.update(extra)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path

@@ -5,8 +5,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py for
 the CPU-timing caveat). ``--full`` uses paper-scale dataset sizes; the
 default keeps the whole suite under a few minutes; ``--smoke`` is the CI
-mode — tiny shapes, SpMM figures + the adaptive-dispatch decisions only,
-well under a minute on a CPU runner.
+mode — tiny shapes, SpMM figures, the adaptive-dispatch decisions and the
+serving-scheduler sweep, a couple of minutes on a CPU runner.
+
+Suites named in ``PERSISTED`` additionally write their rows to
+``BENCH_<suite>.json`` at the repo root (machine-readable perf trajectory
+across PRs; CI uploads them as build artifacts).
 """
 from __future__ import annotations
 
@@ -14,7 +18,11 @@ import argparse
 import sys
 import traceback
 
-from benchmarks.common import header
+from benchmarks.common import header, results_snapshot, write_bench_json
+
+# suites whose rows are persisted as BENCH_<name>.json at the repo root so
+# the perf trajectory stays machine-readable across PRs
+PERSISTED = {"fused", "serve"}
 
 
 def _smoke_suites():
@@ -37,6 +45,8 @@ def _smoke_suites():
             d = select_impl(w, allow_pallas=False)
             row(f"auto/{name}", 0.0, f"{d.impl}(case{d.case},{d.source})")
 
+    from benchmarks import bench_serve
+
     return [
         ("fig8", lambda: bench_fig8.run(batch=20, dim=20, nnz=2,
                                         n_bs=(16, 64))),
@@ -44,6 +54,7 @@ def _smoke_suites():
         ("fig10", lambda: bench_fig10.main(batch=20, n_bs=(64,))),
         ("fused", lambda: bench_fused.main(smoke=True)),
         ("auto", decisions),
+        ("serve", lambda: bench_serve.graph_sweep(smoke=True)),
     ]
 
 
@@ -79,15 +90,23 @@ def main() -> None:
             ("format", lambda: bench_format.main()),
             ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
             ("moe", lambda: bench_moe.main()),
-            ("serve", lambda: bench_serve.main()),
+            ("serve", lambda: bench_serve.main(persist=False)),
         ]
     failed = []
     for name, fn in suites:
+        start = results_snapshot()
+        extra = None
         try:
-            fn()
+            out = fn()
+            if name == "serve" and isinstance(out, dict):
+                extra = {"graph_sweep": out}
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+            continue
+        if name in PERSISTED:
+            path = write_bench_json(name, start=start, extra=extra)
+            print(f"wrote {path}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

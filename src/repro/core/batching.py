@@ -186,6 +186,37 @@ def plan_fused_graph_conv(
                      step_bytes(n_block), sample_chunks)
 
 
+def tier_ladder(
+    *,
+    m_max: int,
+    nnz_max: int,
+    levels: int = 3,
+    m_min: int = 2 * SUBLANES,
+    nnz_min: int = 64,
+) -> tuple[tuple[int, int], ...]:
+    """Geometry ladder for the serving scheduler's bucketing policy
+    (DESIGN.md §8): ``levels`` (m_pad, nnz_pad) rungs halving down from the
+    dataset maxima, each rounded to the same hardware multiples the
+    :class:`BatchPlan` constructors use (``SUBLANES`` rows; nnz slots to 8,
+    matching ``coo_from_lists``). The top rung always covers
+    (``m_max``, ``nnz_max``) so every admissible request has a bucket; lower
+    rungs stop small molecules paying worst-case padding.
+    """
+    if levels < 1:
+        raise ValueError(f"levels must be >= 1, got {levels}")
+    m_top = _round_up(max(m_max, 1), SUBLANES)
+    nnz_top = _round_up(max(nnz_max, 1), 8)
+    ms, nnzs = [], []
+    m, nz = m_top, nnz_top
+    for _ in range(levels):
+        ms.append(max(_round_up(m, SUBLANES), _round_up(m_min, SUBLANES)))
+        nnzs.append(max(_round_up(nz, 8), _round_up(nnz_min, 8)))
+        m //= 2
+        nz //= 2
+    rungs = sorted(set(zip(ms, nnzs)))
+    return tuple(rungs)
+
+
 def plan_batched_gemm(
     *, batch: int, m: int, n: int, k: int, itemsize: int = 4
 ) -> BatchPlan:

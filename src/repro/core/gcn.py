@@ -41,6 +41,13 @@ class GCNConfig:
     batched: bool = True          # Fig. 7 (True) vs Fig. 6 (False)
     interpret: bool | None = None  # None → repro.kernels.default_interpret()
                                    # ($REPRO_INTERPRET, auto-False on TPU)
+    bn_mode: str = "batch"        # "batch": stats over the whole wave (the
+                                  # paper's TF training graph); "sample":
+                                  # per-graph stats over its own real nodes —
+                                  # wave-composition-INVARIANT, required for
+                                  # continuous-batching serving where the set
+                                  # of co-batched requests is a scheduling
+                                  # accident (DESIGN.md §8)
 
     @staticmethod
     def tox21(**kw) -> "GCNConfig":
@@ -74,12 +81,29 @@ def init_gcn(key, cfg: GCNConfig):
     return params
 
 
-def _batch_norm(p, x, mask):
-    """Masked batch-norm over (batch, nodes): padded nodes excluded from the
-    statistics (the paper's TF graph normalizes over real nodes only)."""
-    denom = jnp.maximum(jnp.sum(mask), 1.0)
-    mean = jnp.sum(x * mask, axis=(0, 1)) / denom
-    var = jnp.sum(((x - mean) * mask) ** 2, axis=(0, 1)) / denom
+def _batch_norm(p, x, mask, mode: str = "batch"):
+    """Masked batch-norm: padded nodes excluded from the statistics (the
+    paper's TF graph normalizes over real nodes only).
+
+    ``mode="batch"`` reduces over (batch, nodes) — training semantics, but the
+    output of one graph then depends on which OTHER graphs share its wave.
+    ``mode="sample"`` reduces over each graph's own nodes only, so a request's
+    logits are identical whether it is scored alone or inside any wave — the
+    invariant the continuous-batching scheduler relies on (DESIGN.md §8).
+    """
+    if mode not in ("batch", "sample"):
+        # a typo silently falling into "batch" would void the scheduler's
+        # wave-composition-invariance guarantee — fail at trace time instead
+        raise ValueError(f"unknown bn_mode {mode!r}: expected 'batch' or "
+                         "'sample'")
+    if mode == "sample":
+        denom = jnp.maximum(jnp.sum(mask, axis=(1, 2), keepdims=True), 1.0)
+        mean = jnp.sum(x * mask, axis=1, keepdims=True) / denom
+        var = jnp.sum(((x - mean) * mask) ** 2, axis=1, keepdims=True) / denom
+    else:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        mean = jnp.sum(x * mask, axis=(0, 1)) / denom
+        var = jnp.sum(((x - mean) * mask) ** 2, axis=(0, 1)) / denom
     xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
     return xn * p["scale"] + p["bias"]
 
@@ -104,7 +128,7 @@ def apply_gcn(
                                    mesh=mesh)
         else:
             h = graph_conv_nonbatched(conv_p, adj, h)
-        h = _batch_norm(bn_p, h * mask, mask)
+        h = _batch_norm(bn_p, h * mask, mask, cfg.bn_mode)
         h = jax.nn.relu(h) * mask
     readout = jnp.sum(h, axis=1)                          # masked sum readout
     return readout @ params["head"]["w"] + params["head"]["b"]

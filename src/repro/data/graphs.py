@@ -36,6 +36,14 @@ class GraphDatasetSpec:
     n_features: int = 62
     n_tasks: int = 12
     task: str = "multitask_binary"
+    size_dist: str = "uniform"   # node-count distribution: "uniform" over
+                                 # [min_nodes, max_nodes], or "skewed" — a
+                                 # clipped lognormal whose median sits well
+                                 # below max_nodes, matching the paper's
+                                 # Table I gap between Avg dim and Max dim
+                                 # (most molecules are small; the serving
+                                 # scheduler's bucketing exploits exactly
+                                 # this skew)
     seed: int = 0
 
     @staticmethod
@@ -53,7 +61,13 @@ def _random_molecule(rng: np.random.Generator, spec: GraphDatasetSpec):
     """Random connected graph with chemistry-like degree bound, bond types
     assigned per edge; channel 0 additionally carries the self-loops
     (a_uu = 1, paper §II-A)."""
-    n = int(rng.integers(spec.min_nodes, spec.max_nodes + 1))
+    if spec.size_dist == "skewed":
+        # median ≈ min + (max-min)/4, long right tail clipped at max_nodes
+        med = spec.min_nodes + (spec.max_nodes - spec.min_nodes) / 4
+        n = int(np.clip(round(rng.lognormal(np.log(med), 0.45)),
+                        spec.min_nodes, spec.max_nodes))
+    else:
+        n = int(rng.integers(spec.min_nodes, spec.max_nodes + 1))
     deg = np.zeros(n, np.int32)
     edges = []
     for v in range(1, n):                       # random spanning tree

@@ -1,0 +1,28 @@
+"""Continuous-batching graph-serving scheduler (DESIGN.md §8).
+
+Queue → geometry buckets → continuous-batching dispatcher → per-tier
+compiled programs → metrics. ``Scheduler`` is the front end; the legacy
+``GraphServeEngine`` remains the per-wave executor underneath it.
+"""
+from repro.scheduler.bucketing import GeometryTier, TierPolicy  # noqa: F401
+from repro.scheduler.dispatcher import (  # noqa: F401
+    ContinuousDispatcher,
+    Wait,
+    WavePlan,
+)
+from repro.scheduler.metrics import ServeMetrics, WaveRecord  # noqa: F401
+from repro.scheduler.programs import ProgramCache, TierProgram  # noqa: F401
+from repro.scheduler.queue import AdmissionQueue, PendingRequest  # noqa: F401
+from repro.scheduler.scheduler import (  # noqa: F401
+    RealClock,
+    Scheduler,
+    SchedulerConfig,
+    VirtualClock,
+)
+
+__all__ = [
+    "AdmissionQueue", "ContinuousDispatcher", "GeometryTier", "PendingRequest",
+    "ProgramCache", "RealClock", "Scheduler", "SchedulerConfig",
+    "ServeMetrics", "TierPolicy", "TierProgram", "VirtualClock", "Wait",
+    "WavePlan", "WaveRecord",
+]

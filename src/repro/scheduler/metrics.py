@@ -1,0 +1,129 @@
+"""Serving metrics: throughput, latency percentiles, padding waste, compiles.
+
+One :class:`ServeMetrics` instance accumulates per-wave and per-request
+records over a scheduler run and reduces them to the numbers the benchmarks
+compare (DESIGN.md §8):
+
+- **throughput** — served requests per second of clock time between the
+  first arrival and the last wave completion;
+- **p50/p99 latency** — request completion latency (finish − arrival), the
+  continuous-batching headline number;
+- **padding-waste ratio** — 1 − (real node rows) / (padded node-row capacity)
+  over all executed waves (and the same for nnz slots): what the §IV-C
+  pad-to-max policy costs, and what bucketing claws back;
+- **compile count** — distinct wave programs built, which must equal the
+  number of geometry tiers used (the program-cache invariant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.engine import GraphWaveReport
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveRecord:
+    tier_key: str
+    dispatch: float
+    service_time: float
+    report: GraphWaveReport
+
+
+class ServeMetrics:
+    def __init__(self) -> None:
+        self.waves: list[WaveRecord] = []
+        self.latencies: list[float] = []
+        self.waits: list[float] = []
+        self.first_arrival: float | None = None
+        self.last_finish: float | None = None
+        self.served = 0
+        self.rejected = 0
+        self.deadline_misses = 0
+        self.compile_count = 0
+
+    # -- recording ----------------------------------------------------------
+    def record_wave(self, tier_key: str, dispatch: float,
+                    service_time: float, report: GraphWaveReport) -> None:
+        self.waves.append(WaveRecord(tier_key, dispatch, service_time,
+                                     report))
+
+    def record_request(self, *, arrival: float, dispatch: float,
+                       finish: float, deadline: float | None = None,
+                       failed: bool = False) -> None:
+        if self.first_arrival is None or arrival < self.first_arrival:
+            self.first_arrival = arrival
+        if self.last_finish is None or finish > self.last_finish:
+            self.last_finish = finish
+        if failed:
+            self.rejected += 1
+            return
+        self.served += 1
+        self.latencies.append(finish - arrival)
+        self.waits.append(dispatch - arrival)
+        if deadline is not None and finish > deadline:
+            self.deadline_misses += 1
+
+    def record_rejection(self, *, arrival: float) -> None:
+        if self.first_arrival is None or arrival < self.first_arrival:
+            self.first_arrival = arrival
+        self.rejected += 1
+
+    # -- reductions ---------------------------------------------------------
+    def latency_percentile(self, p: float) -> float:
+        if not self.latencies:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies), p))
+
+    @property
+    def p50(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def throughput(self) -> float:
+        if (self.first_arrival is None or self.last_finish is None
+                or self.last_finish <= self.first_arrival):
+            return float("nan")
+        return self.served / (self.last_finish - self.first_arrival)
+
+    @property
+    def padding_waste_nodes(self) -> float:
+        cap = sum(w.report.node_capacity for w in self.waves)
+        real = sum(w.report.real_nodes for w in self.waves)
+        return float("nan") if cap == 0 else 1.0 - real / cap
+
+    @property
+    def padding_waste_nnz(self) -> float:
+        cap = sum(w.report.nnz_capacity for w in self.waves)
+        real = sum(w.report.real_nnz for w in self.waves)
+        return float("nan") if cap == 0 else 1.0 - real / cap
+
+    @property
+    def fill_rate(self) -> float:
+        slots = sum(w.report.slots for w in self.waves)
+        real = sum(w.report.n_requests - w.report.n_failed
+                   for w in self.waves)
+        return float("nan") if slots == 0 else real / slots
+
+    def summary(self) -> dict:
+        """Machine-readable rollup (what BENCH_serve.json persists)."""
+        return {
+            "served": self.served,
+            "rejected": self.rejected,
+            "deadline_misses": self.deadline_misses,
+            "waves": len(self.waves),
+            "compile_count": self.compile_count,
+            "throughput_rps": self.throughput,
+            "latency_p50_s": self.p50,
+            "latency_p99_s": self.p99,
+            "mean_wait_s": (float(np.mean(self.waits))
+                            if self.waits else float("nan")),
+            "padding_waste_nodes": self.padding_waste_nodes,
+            "padding_waste_nnz": self.padding_waste_nnz,
+            "fill_rate": self.fill_rate,
+        }

@@ -1,6 +1,7 @@
 from repro.serving.engine import (  # noqa: F401
     GraphRequest,
     GraphServeEngine,
+    GraphWaveReport,
     Request,
     ServeEngine,
 )

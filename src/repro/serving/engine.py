@@ -125,7 +125,12 @@ class ServeEngine:
 
 @dataclasses.dataclass
 class GraphRequest:
-    """One molecule to score: per-channel COO triples + node features."""
+    """One molecule to score: per-channel COO triples + node features.
+
+    ``failed``/``error`` record a per-request rejection (oversize for the
+    wave geometry, no admissible bucket, …) — a failed request never kills
+    its wave; the other slots are served normally.
+    """
 
     rows: list[np.ndarray]          # one (e,) int array per channel
     cols: list[np.ndarray]
@@ -133,6 +138,28 @@ class GraphRequest:
     n_nodes: int
     logits: np.ndarray | None = None
     done: bool = False
+    failed: bool = False
+    error: str | None = None
+
+    @property
+    def max_nnz(self) -> int:
+        """Largest per-channel edge count — with ``n_nodes`` the request's
+        geometry, which the scheduler buckets on (DESIGN.md §8)."""
+        return max((len(r) for r in self.rows), default=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphWaveReport:
+    """What one executed wave actually carried vs. what its geometry paid
+    for — the per-wave record behind the scheduler's padding-waste metric."""
+
+    slots: int                      # wave batch slots (engine.batch)
+    n_requests: int                 # real requests placed in the wave
+    n_failed: int                   # of those, rejected by validation
+    real_nodes: int                 # Σ n_nodes over served requests
+    real_nnz: int                   # Σ over served requests and channels
+    node_capacity: int              # slots * m_pad
+    nnz_capacity: int               # slots * channels * nnz_pad
 
 
 class GraphServeEngine:
@@ -188,39 +215,57 @@ class GraphServeEngine:
             k_pad=self.cfg.k_pad, interpret=self.cfg.interpret,
             mesh=self.mesh)
 
-    def _validate(self, s: int, r: GraphRequest) -> None:
+    def _validate(self, s: int, r: GraphRequest) -> str | None:
+        """Reason this request cannot ride this engine's wave geometry, or
+        None when it fits. Never raises: an oversize request is a per-slot
+        failure, not a wave-killer — the scheduler routes it to a bigger
+        bucket or rejects it cleanly (DESIGN.md §8)."""
         if r.n_nodes > self.m_pad:
-            raise ValueError(
-                f"request {s}: n_nodes={r.n_nodes} exceeds engine "
-                f"m_pad={self.m_pad}; raise m_pad or shard the molecule")
+            return (f"request {s}: n_nodes={r.n_nodes} exceeds wave "
+                    f"m_pad={self.m_pad}; needs a bigger geometry tier")
         for ch, rows in enumerate(r.rows):
             if len(rows) > self.nnz_pad:
-                raise ValueError(
-                    f"request {s}, channel {ch}: {len(rows)} edges exceed "
-                    f"engine nnz_pad={self.nnz_pad}")
+                return (f"request {s}, channel {ch}: {len(rows)} edges "
+                        f"exceed wave nnz_pad={self.nnz_pad}")
+        return None
 
-    def _run_wave(self, wave: list[GraphRequest]) -> None:
+    def run_wave(self, wave: list[GraphRequest]) -> GraphWaveReport:
+        """Execute ONE wave (≤ ``batch`` requests) through the shared jitted
+        program and return the wave's fill/padding accounting. This is the
+        per-wave executor the continuous-batching ``repro.scheduler`` drives;
+        ``run()`` keeps the legacy fixed-slicing loop on top of it."""
         n = len(wave)
+        if n > self.batch:
+            raise ValueError(f"wave of {n} requests > {self.batch} slots")
         channels = self.cfg.channels
         n_feat = self.cfg.n_features
         x = np.zeros((self.batch, self.m_pad, n_feat), np.float32)
         n_nodes = np.zeros((self.batch,), np.int32)
         triples_by_ch = [[] for _ in range(channels)]
+        served: list[tuple[int, GraphRequest]] = []
+        n_failed = real_nodes = real_nnz = 0
         for s in range(self.batch):
-            if s < n:
-                r = wave[s]
-                self._validate(s, r)
-                x[s, :r.n_nodes] = r.features
-                n_nodes[s] = r.n_nodes
-                for ch in range(channels):
-                    rows = np.asarray(r.rows[ch], np.int32)
-                    cols = np.asarray(r.cols[ch], np.int32)
-                    triples_by_ch[ch].append(
-                        (rows, cols, np.ones(len(rows), np.float32)))
-            else:       # empty slot: zero-nnz adjacency
-                for ch in range(channels):
-                    z = np.zeros(0, np.int32)
-                    triples_by_ch[ch].append((z, z, np.zeros(0, np.float32)))
+            r = wave[s] if s < n else None
+            if r is not None:
+                err = self._validate(s, r)
+                if err is None:
+                    served.append((s, r))
+                    x[s, :r.n_nodes] = r.features
+                    n_nodes[s] = r.n_nodes
+                    real_nodes += r.n_nodes
+                    for ch in range(channels):
+                        rows = np.asarray(r.rows[ch], np.int32)
+                        cols = np.asarray(r.cols[ch], np.int32)
+                        real_nnz += len(rows)
+                        triples_by_ch[ch].append(
+                            (rows, cols, np.ones(len(rows), np.float32)))
+                    continue
+                r.failed, r.error, r.done = True, err, False
+                n_failed += 1
+            # empty or failed slot: zero-nnz adjacency
+            for ch in range(channels):
+                z = np.zeros(0, np.int32)
+                triples_by_ch[ch].append((z, z, np.zeros(0, np.float32)))
         adj = [coo_from_lists(t, n_rows=list(n_nodes),
                               nnz_pad=self.nnz_pad)
                for t in triples_by_ch]
@@ -240,9 +285,28 @@ class GraphServeEngine:
             adj_arrays, x, n_nodes = jax.tree.map(
                 place, (adj_arrays, x, n_nodes))
         logits = np.asarray(self._apply(adj_arrays, x, n_nodes))
-        for s in range(n):
-            wave[s].logits = logits[s]
-            wave[s].done = True
+        for s, r in served:
+            r.logits = logits[s]
+            r.done = True
+        return GraphWaveReport(
+            slots=self.batch, n_requests=n, n_failed=n_failed,
+            real_nodes=real_nodes, real_nnz=real_nnz,
+            node_capacity=self.batch * self.m_pad,
+            nnz_capacity=self.batch * channels * self.nnz_pad)
+
+    # _serve_in_waves drives waves through the same public executor
+    _run_wave = run_wave
+
+    def compiled_programs(self) -> int | None:
+        """Entries in this engine's jit cache — 1 is the one-program-per-
+        geometry invariant the scheduler's program cache relies on. The
+        count comes from JAX's private ``_cache_size`` introspection helper;
+        None when that helper is unavailable (this method is the ONE place
+        that dependency lives)."""
+        try:
+            return self._apply._cache_size()
+        except AttributeError:
+            return None
 
     def run(self, requests: list[GraphRequest]) -> list[GraphRequest]:
         return _serve_in_waves(self, requests)
