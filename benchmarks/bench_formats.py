@@ -1,0 +1,112 @@
+"""Format sweep (DESIGN.md §9): COO vs ELL vs CSR vs dense on the paper's
+Fig. 8–10 geometries.
+
+The paper's central variable is the sparse *format* the batched kernel runs
+over; this harness makes that a measured, per-geometry decision. Each
+geometry times every XLA-lowered format class on identical inputs (the
+Pallas variants are interpret-mode Python on CPU — correctness paths, never
+timed here; their TPU costs are modeled in `autotune/cost_model.py`):
+
+- ``ref``    COO scatter-add (SparseTensor class);
+- ``ell``    row-split over the padded ELL slots, k_pad = the batch's TRUE
+             max row degree (sized via `repro.core.formats.max_row_degree`,
+             so no silent nnz drops);
+- ``csr``    CSR segment-sum over the flat nnz arrays;
+- ``dense``  densify + batched GEMM (the gemmBatched baseline).
+
+Geometries mirror the figures: fig8 (small fixed-size molecules, feature
+width sweep axis), fig9 (larger uniform matrices), fig10 (mixed sizes — the
+skewed-degree regime where the flat-nnz formats stop paying max-degree
+padding). Rows persist to ``BENCH_formats.json``; each geometry also emits
+a ``best=`` row whose ``ratio=`` (t_ref / t_best, ≥ 1.0 by construction
+since ref is a candidate) opts into the CI bench-JSON gate
+(`benchmarks/check_bench_json.py`) as a harness-integrity check, and an
+informational ``batched_vs_loop`` row (batched scatter vs sequential
+per-sample dispatch). The non-tautological gated ratio is bench_serve's
+deterministic p99-improvement row.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import max_row_degree, random_batch
+from repro.core.spmm import batched_spmm
+
+FORMATS = ("ref", "ell", "csr", "dense")
+
+GEOMETRIES = {
+    # name: (batch, dim, nnz_per_row, n_b)
+    "fig8": (100, 20, 2, 64),         # many small molecules (Table I scale)
+    "fig9": (40, 64, 2, 64),          # larger uniform matrices
+    "fig10": (40, (8, 64), (1, 8), 64),  # mixed sizes: the skewed regime
+}
+
+# smoke keeps dims/features small but the BATCH big enough that the
+# batched-vs-loop guard ratio has real margin over the 0.5 CI gate (the
+# sequential loop's per-sample dispatch has to dominate)
+SMOKE = {
+    "fig8": (64, 16, 2, 32),
+    "fig9": (32, 32, 2, 32),
+    "fig10": (32, (8, 32), (1, 6), 32),
+}
+
+
+def sweep_geometry(name: str, batch, dim, nnz, n_b, *, iters: int = 10):
+    """Time every format on one geometry; returns {impl: seconds}."""
+    # crc32, not hash(): PYTHONHASHSEED randomizes hash() per process, and
+    # these rows are a cross-PR perf trajectory — inputs must be identical
+    # run to run for the persisted ratios to mean anything
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+    b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
+    # lossless ELL sizing: the batch's true max row degree, never a guess
+    k_pad = int(np.asarray(max_row_degree(coo, m_pad)).max())
+
+    times: dict[str, float] = {}
+    for impl in FORMATS:
+        fn = jax.jit(functools.partial(batched_spmm, impl=impl, k_pad=k_pad))
+        times[impl] = time_fn(fn, coo, b, warmup=2, iters=iters)
+    t_ref = times["ref"]
+    for impl in FORMATS:
+        row(f"formats/{name}/{impl}", times[impl] * 1e6,
+            f"{t_ref / times[impl]:.2f}xref k{k_pad}")
+    best = min(times, key=times.get)
+    # ratio= opts the row into the CI gate; ref is itself a candidate, so
+    # this one is >= 1.0 by construction — it guards harness integrity
+    # (schema/parse/inversion), not perf. The NON-tautological gated ratio
+    # lives in bench_serve's deterministic p99-improvement row; the
+    # batched-vs-loop comparison below is informational only, because on
+    # CPU the loop/ref margin (~1.1-1.5x) is within an XLA version bump
+    # of the 0.5 gate.
+    row(f"formats/{name}/best", times[best] * 1e6,
+        f"best={best},ratio={t_ref / times[best]:.2f}")
+    t_loop = time_fn(
+        jax.jit(functools.partial(batched_spmm, impl="loop", k_pad=k_pad)),
+        coo, b, warmup=2, iters=iters)
+    row(f"formats/{name}/batched_vs_loop", t_loop * 1e6,
+        f"loop_vs_ref={t_loop / t_ref:.2f}x")
+    return times
+
+
+def main(smoke: bool = False):
+    geos = SMOKE if smoke else GEOMETRIES
+    out = {}
+    for name, (batch, dim, nnz, n_b) in geos.items():
+        out[name] = sweep_geometry(name, batch, dim, nnz, n_b,
+                                   iters=5 if smoke else 10)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.common import header
+
+    header()
+    main(smoke="--smoke" in sys.argv)

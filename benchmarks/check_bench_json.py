@@ -1,0 +1,84 @@
+"""CI sanity gate for the persisted ``BENCH_*.json`` artifacts.
+
+Two classes of failure, both cheap to hit when a harness regresses silently:
+
+1. **Schema** — a persisted file missing its required top-level keys
+   (``suite``/``backend``/``rows``) or rows missing ``name``/``us_per_call``
+   /``derived`` would break the cross-PR perf-trajectory tooling downstream.
+2. **Regression guard** — rows that publish an explicit ``ratio=<float>``
+   field in ``derived`` (e.g. ``bench_formats``'s ``best=csr,ratio=1.31``
+   rows, defined so the ratio is ≥ 1.0 by construction) must never report
+   below ``MIN_RATIO``: a value that low means the measured comparison
+   inverted — the harness or the kernel it guards broke, not timing noise.
+   Free-form ``...x`` annotations (like the fused bench's CPU wall ratios)
+   are NOT guarded; only the explicit ``ratio=`` marker opts a row in.
+
+Exit code 1 with one line per problem; silent 0 otherwise.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_json [paths...]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+from benchmarks.common import REPO_ROOT
+
+REQUIRED_TOP = ("suite", "backend", "rows")
+REQUIRED_ROW = ("name", "us_per_call", "derived")
+RATIO_RE = re.compile(r"(?:^|[ ,;])ratio=([-+0-9.eE]+)")
+MIN_RATIO = 0.5
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    for key in REQUIRED_TOP:
+        if key not in doc:
+            errors.append(f"{path.name}: missing required key {key!r}")
+    for i, r in enumerate(doc.get("rows", [])):
+        for key in REQUIRED_ROW:
+            if key not in r:
+                errors.append(f"{path.name}: rows[{i}] missing {key!r}")
+                continue
+        m = RATIO_RE.search(str(r.get("derived", "")))
+        if m:
+            try:
+                ratio = float(m.group(1))
+            except ValueError:
+                errors.append(
+                    f"{path.name}: rows[{i}] ({r.get('name')}) unparseable "
+                    f"ratio in derived={r.get('derived')!r}")
+                continue
+            if ratio < MIN_RATIO:
+                errors.append(
+                    f"{path.name}: rows[{i}] ({r.get('name')}) reports "
+                    f"ratio={ratio} < {MIN_RATIO} — regression guard")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [pathlib.Path(p) for p in argv] or \
+        sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench_json: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for p in paths:
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"check_bench_json: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench_json: {len(paths)} file(s) OK "
+              f"({', '.join(p.name for p in paths)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

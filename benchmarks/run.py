@@ -22,11 +22,17 @@ from benchmarks.common import header, results_snapshot, write_bench_json
 
 # suites whose rows are persisted as BENCH_<name>.json at the repo root so
 # the perf trajectory stays machine-readable across PRs
-PERSISTED = {"fused", "serve"}
+PERSISTED = {"fused", "serve", "formats"}
 
 
 def _smoke_suites():
-    from benchmarks import bench_fig8, bench_fig9, bench_fig10, bench_fused
+    from benchmarks import (
+        bench_fig8,
+        bench_fig9,
+        bench_fig10,
+        bench_formats,
+        bench_fused,
+    )
 
     def decisions():
         """Print the impl="auto" decision for the acceptance regimes."""
@@ -53,6 +59,7 @@ def _smoke_suites():
         ("fig9", lambda: bench_fig9.one(20, 32, 2, n_b=64)),
         ("fig10", lambda: bench_fig10.main(batch=20, n_bs=(64,))),
         ("fused", lambda: bench_fused.main(smoke=True)),
+        ("formats", lambda: bench_formats.main(smoke=True)),
         ("auto", decisions),
         ("serve", lambda: bench_serve.graph_sweep(smoke=True)),
     ]
@@ -75,6 +82,7 @@ def main() -> None:
             bench_fig9,
             bench_fig10,
             bench_format,
+            bench_formats,
             bench_fused,
             bench_kernel_breakdown,
             bench_moe,
@@ -88,6 +96,7 @@ def main() -> None:
             ("fused", lambda: bench_fused.main()),
             ("table4", lambda: bench_kernel_breakdown.main()),
             ("format", lambda: bench_format.main()),
+            ("formats", lambda: bench_formats.main()),
             ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
             ("moe", lambda: bench_moe.main()),
             ("serve", lambda: bench_serve.main(persist=False)),

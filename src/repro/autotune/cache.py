@@ -129,16 +129,40 @@ def measure_workload(
     from repro.kernels.ops import batched_spmm
 
     layer = w.channels is not None and w.n_in is not None
+    ell_lossy = (w.k_pad is not None and w.nnz_pad > w.m_pad * w.k_pad)
     if impls is None:
         ranked = (rank_layer if layer else rank)(
             w, allow_pallas=not interpret)
         impls = tuple(i for i, _ in ranked)
+        if ell_lossy:
+            # ELL cannot represent this workload losslessly (more slots
+            # than m_pad·k_pad cells) — timing its candidates would measure
+            # a silently truncated product and poison the cache record
+            impls = tuple(i for i in impls if i not in ("ell", "pallas_ell"))
+    elif ell_lossy and any(i in ("ell", "pallas_ell") for i in impls):
+        # an EXPLICITLY requested unmeasurable impl must fail loudly, not
+        # silently vanish from the record
+        raise ValueError(
+            f"workload {w.key()}: nnz_pad={w.nnz_pad} > m_pad*k_pad="
+            f"{w.m_pad * w.k_pad} — the requested ELL impl(s) cannot "
+            "represent it losslessly, so their timings would be bogus")
 
     rng = np.random.default_rng(seed)
     dtype = jnp.bfloat16 if w.itemsize == 2 else jnp.float32
 
     def make_coo():
-        rid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
+        if w.k_pad is not None and w.nnz_pad <= w.m_pad * w.k_pad:
+            # Bound every row to ≤ k_pad non-zeros so the ELL candidates
+            # measure the SAME computation as the rest — fully random row
+            # ids can exceed k_pad and coo_to_ell would silently drop the
+            # overflow, timing a smaller product under this workload's key.
+            base = (np.arange(w.nnz_pad, dtype=np.int64) // w.k_pad) % w.m_pad
+            rid = np.stack([
+                rng.permutation(w.m_pad).astype(np.int32)[base]
+                for _ in range(w.batch)])
+        else:
+            rid = rng.integers(0, w.m_pad,
+                               (w.batch, w.nnz_pad)).astype(np.int32)
         cid = rng.integers(0, w.m_pad, (w.batch, w.nnz_pad)).astype(np.int32)
         return BatchedCOO(
             row_ids=jnp.asarray(rid), col_ids=jnp.asarray(cid),

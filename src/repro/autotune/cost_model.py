@@ -26,6 +26,18 @@ the execution structure being modeled):
                (each output row is owned by one reduction).
 - ``pallas_ell``  same arithmetic, but panel-blocked: inputs are re-read once
                per column panel and the output block stays VMEM-resident.
+- ``csr``      XLA CSR segment-sum: the ref traffic plus the rpt arrays —
+               the scatter stays, only the layout changes.
+- ``pallas_csr``  CSR row-split (DESIGN.md §9): the ELL arithmetic with the
+               inner loop bounded by the true max row degree (statically:
+               ``k_pad`` when known, else the uniform ``nnz_pad / m_pad``
+               estimate) and HBM traffic on the FLAT nnz arrays —
+               ``nnz_pad`` slots, not ``m_pad · k_pad`` — which is what
+               makes CSR win skewed-degree batches (GE-SpMM's case).
+               Format conversions (COO→ELL, COO→CSR, densify) are charged
+               to no impl: every non-COO path converts inside ``_forward``,
+               so the ranking compares like with like; the real conversion
+               cost is measured by ``benchmarks/bench_formats.py``.
 - ``pallas_coo``  the one-hot MXU scatter: each CHUNK of non-zeros costs a
                (CHUNK × m_pad)ᵀ × (CHUNK × n_block) contraction.
 - ``dense`` / ``pallas_gemm``  densify (write + read m_pad² per matrix) then
@@ -168,6 +180,31 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
+    if impl in ("csr", "pallas_csr"):
+        # static stand-in for the kernel's dynamic per-matrix row bound
+        row_bound = w.k_pad if w.k_pad is not None else max(
+            1, -(-w.nnz_pad // w.m_pad))
+        if impl == "csr":
+            # segment-sum reference: ref's gather/scatter traffic + rpt
+            gather = w.batch * w.nnz_pad * w.n_b * w.itemsize
+            idx = w.batch * (w.nnz_pad * 8 + w.m_pad * 4)
+            flops = 2.0 * w.batch * w.nnz_pad * w.n_b
+            bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
+            return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
+        plan = spmm_plan(w, "pallas_csr")
+        if plan.case == 3:
+            return float("inf")   # kernels/ops.py falls back before Pallas
+        flops = 2.0 * w.batch * w.m_pad * row_bound * w.n_b
+        # per (matrix × panel) grid step: B panel + FLAT cid/val arrays +
+        # start/rlen row pointers; output panel written once.
+        per_step = (w.m_pad * plan.n_block * w.itemsize
+                    + w.nnz_pad * (4 + w.itemsize)
+                    + 2 * w.m_pad * 4)
+        bytes_ = w.batch * plan.p * per_step + out_bytes
+        steps = w.batch * plan.p
+        return (_roofline(flops, bytes_, vpu_peak, hw)
+                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
+
     if impl == "pallas_coo":
         plan = spmm_plan(w, "pallas_coo")
         if plan.case == 3:
@@ -234,9 +271,9 @@ def rank(w: Workload, *, allow_pallas: bool = True,
     is a Python emulator, never a performance path) restricts candidates to
     the XLA-lowered impls.
     """
-    candidates = ["ref", "ell", "dense", "loop"]
+    candidates = ["ref", "ell", "csr", "dense", "loop"]
     if allow_pallas:
-        candidates += ["pallas_ell", "pallas_coo", "pallas_gemm"]
+        candidates += ["pallas_ell", "pallas_csr", "pallas_coo", "pallas_gemm"]
     scored = [(i, estimate(w, i, hw)) for i in candidates]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))
@@ -287,9 +324,10 @@ def rank_layer(w: Workload, *, allow_pallas: bool = True,
     fallback layer) plus ``"fused"`` when Pallas is allowed — the megakernel
     is Pallas-only, so the CPU/interpret posture never selects it.
     """
-    candidates = ["ref", "ell", "dense", "loop"]
+    candidates = ["ref", "ell", "csr", "dense", "loop"]
     if allow_pallas:
-        candidates += ["pallas_ell", "pallas_coo", "pallas_gemm", "fused"]
+        candidates += ["pallas_ell", "pallas_csr", "pallas_coo",
+                       "pallas_gemm", "fused"]
     scored = [(i, estimate_layer(w, i, hw)) for i in candidates]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))

@@ -49,6 +49,7 @@ def _layer_plan(w: Workload, impl: str) -> BatchPlan:
 KINDS = {
     "ref": "scatter", "loop": "scatter",
     "ell": "ell", "pallas_ell": "ell",
+    "csr": "csr", "pallas_csr": "csr",
     "pallas_coo": "coo",
     "dense": "gemm", "pallas_gemm": "gemm",
     "fused": "fused",

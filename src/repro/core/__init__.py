@@ -7,7 +7,10 @@ from repro.core.formats import (  # noqa: F401
     coo_to_csr,
     coo_to_dense,
     coo_to_ell,
+    csr_transpose,
+    max_row_degree,
     random_batch,
+    validate_ell_k_pad,
 )
 from repro.core.batching import (  # noqa: F401
     BatchPlan,

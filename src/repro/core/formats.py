@@ -87,6 +87,12 @@ class BatchedCSR:
     def nnz_pad(self) -> int:
         return self.values.shape[1]
 
+    @property
+    def nnz(self) -> jax.Array:
+        """(batch,) int32 — true nnz per matrix (the CSR invariant: rpt's
+        last entry counts exactly the valid slots)."""
+        return self.rpt[:, -1]
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -176,10 +182,92 @@ def coo_to_csr(coo: BatchedCOO, m_pad: int) -> BatchedCSR:
     return BatchedCSR(rpt=rpt, col_ids=cid, values=val, n_rows=coo.n_rows)
 
 
-def coo_to_ell(coo: BatchedCOO, m_pad: int, k_pad: int) -> BatchedELL:
+def csr_transpose(csr: BatchedCSR, n_cols: int | None = None) -> BatchedCSR:
+    """Device-side Aᵀ in CSR for the backward pass (paper §IV-D: Batched SpMM
+    is also applied to backprop). COO transposes by swapping index arrays;
+    CSR has to re-sort: expand ``rpt`` back to per-slot row ids
+    (``searchsorted``), stable-sort by column id, and rebuild the row
+    pointers over ``n_cols`` (defaults to square: ``m_pad``). Padded slots
+    sort to the tail with value 0.0, exactly like ``coo_to_csr``."""
+    n_cols = n_cols or csr.m_pad
+
+    def expand(rpt):
+        # per-slot row ids back from the pointers; padded slots clip to the
+        # last row but coo_to_csr re-masks them from nnz anyway
+        m_pad = rpt.shape[0] - 1
+        slot = jnp.arange(csr.nnz_pad)
+        return jnp.clip(jnp.searchsorted(rpt, slot, side="right") - 1,
+                        0, m_pad - 1)
+
+    coo_t = BatchedCOO(row_ids=csr.col_ids, col_ids=jax.vmap(expand)(csr.rpt),
+                       values=csr.values, nnz=csr.nnz, n_rows=csr.n_rows)
+    # the sort / padding-to-tail / rpt-rebuild invariant has ONE owner
+    return coo_to_csr(coo_t, n_cols)
+
+
+def max_row_degree(coo: BatchedCOO, m_pad: int) -> jax.Array:
+    """(batch,) int32 — the true max nnz in any single row of each sample
+    (only valid slots counted). This is the statistic ``k_pad`` must cover
+    for an ELL conversion to be lossless."""
+
+    def one(rid, nnz):
+        valid = (jnp.arange(rid.shape[0]) < nnz).astype(jnp.int32)
+        counts = jnp.zeros((m_pad,), jnp.int32).at[
+            jnp.clip(rid, 0, m_pad - 1)].add(valid)
+        return jnp.max(counts)
+
+    return jax.vmap(one)(coo.row_ids, coo.nnz)
+
+
+def validate_ell_k_pad(coo: BatchedCOO, m_pad: int, k_pad: int,
+                       *, on_traced: str = "skip") -> None:
+    """Guard against silent ELL nnz drops: raise when any row holds more than
+    ``k_pad`` non-zeros (``coo_to_ell`` would zero the overflow out and the
+    product would be silently wrong).
+
+    Concrete (eager) inputs raise ``ValueError`` host-side immediately.
+    Traced inputs cannot branch on data, so ``on_traced`` selects the
+    posture: ``"skip"`` (no runtime cost — the jitted hot path) or
+    ``"debug"`` (a ``jax.debug.callback`` assert that raises host-side at
+    run time; best-effort on async backends)."""
+    if isinstance(coo.row_ids, jax.core.Tracer) or \
+            isinstance(coo.nnz, jax.core.Tracer):
+        if on_traced == "debug":
+            def _assert(deg):
+                worst = int(np.max(deg, initial=0))
+                if worst > k_pad:
+                    raise ValueError(
+                        f"coo_to_ell overflow: a row holds {worst} non-zeros "
+                        f"but k_pad={k_pad}; the ELL conversion would "
+                        "silently drop the excess")
+            jax.debug.callback(_assert, max_row_degree(coo, m_pad))
+        return
+    rid = np.asarray(coo.row_ids)
+    nnz = np.asarray(coo.nnz)
+    worst = 0
+    for b in range(rid.shape[0]):
+        k = int(nnz[b])
+        if k:
+            worst = max(worst, int(np.bincount(rid[b, :k]).max()))
+    if worst > k_pad:
+        raise ValueError(
+            f"k_pad={k_pad} is smaller than the batch's true max row degree "
+            f"{worst}: the ELL conversion would silently zero out "
+            f"{worst - k_pad} non-zero(s) in the worst row. Size k_pad from "
+            "the planner's batch maximum (repro.core.formats.max_row_degree) "
+            "or pick a CSR/COO impl, which have no per-row bound.")
+
+
+def coo_to_ell(coo: BatchedCOO, m_pad: int, k_pad: int,
+               *, check: bool = False) -> BatchedELL:
     """Device-side COO → ELL. Slot index within a row is computed with a
-    stable sort + per-row running count; rows with > k_pad nnz are invalid
-    (callers size k_pad from the planner's batch maximum)."""
+    stable sort + per-row running count; rows with > k_pad nnz OVERFLOW —
+    their excess non-zeros are dropped (zeroed), so callers must size
+    ``k_pad`` from the batch's true max row degree. ``check=True`` guards
+    the conversion: concrete inputs raise host-side, traced inputs install
+    a runtime debug-assert (see :func:`validate_ell_k_pad`)."""
+    if check:
+        validate_ell_k_pad(coo, m_pad, k_pad, on_traced="debug")
 
     def one(rid, cid, val, nnz):
         nnz_pad = rid.shape[0]
@@ -253,12 +341,13 @@ def random_batch(
         k = int(rng.integers(ks[0], ks[1] + 1))
         rows, cols = [], []
         for r in range(m):
-            cs = rng.choice(m, size=min(k, m), replace=False)
+            cs = rng.choice(m, size=min(k, m), replace=False).tolist()
             rows.extend([r] * len(cs))
-            cols.extend(cs.tolist())
-        if self_loops:
-            # a_uu = 1 (paper §II-A)
-            for r in range(m):
+            cols.extend(cs)
+            # a_uu = 1 (paper §II-A) — only when rng.choice did not already
+            # sample the diagonal, else the duplicate COO entries would sum
+            # to 2.0 on densify
+            if self_loops and r not in cs:
                 rows.append(r)
                 cols.append(r)
         rows = np.asarray(rows, np.int32)

@@ -81,6 +81,43 @@ def init_gcn(key, cfg: GCNConfig):
     return params
 
 
+def resolve_conv_impls(cfg: GCNConfig, batch: int, m_pad: int, nnz_pad: int,
+                       *, itemsize: int = 4, mesh=None):
+    """The resolved layer impl for EVERY conv layer of the stack, one
+    :class:`repro.autotune.Decision` per ``cfg.conv_widths`` entry.
+
+    ``apply_gcn`` re-resolves ``impl="auto"`` per layer (each layer's
+    workload differs in n_in/n_out), so a guard or audit that looks only at
+    the first layer can miss a deeper layer landing in a different kernel
+    class — consumers that gate on "could an ELL impl run?" must OR over
+    this whole tuple. ``itemsize`` must match the features the runtime will
+    actually carry (the Workload key embeds it, and the tuning cache is
+    keyed per itemsize) — default 4 for the f32 GCN stack. Pure shape work:
+    safe to call host-side per geometry."""
+    from repro import autotune
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(cfg.interpret)
+    decisions = []
+    n_in = cfg.n_features
+    for n_out in cfg.conv_widths:
+        w = autotune.Workload(
+            batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=cfg.k_pad,
+            n_b=n_out, itemsize=itemsize, channels=cfg.channels, n_in=n_in)
+        if mesh is not None:
+            from repro.distributed.spmm import shard_count
+
+            w = w.shard(shard_count(mesh, "data"))
+        if cfg.impl != "auto":
+            decisions.append(autotune.forced_decision(w, cfg.impl))
+        else:
+            decisions.append(autotune.select_graph_conv_impl(
+                w, allow_pallas=not interpret,
+                cache=autotune.default_cache()))
+        n_in = n_out
+    return tuple(decisions)
+
+
 def _batch_norm(p, x, mask, mode: str = "batch"):
     """Masked batch-norm: padded nodes excluded from the statistics (the
     paper's TF graph normalizes over real nodes only).

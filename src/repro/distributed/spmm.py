@@ -126,7 +126,7 @@ def sharded_batched_spmm(
     ``b`` with batch-sharded cotangents. ``impl="auto"`` resolves against the
     per-shard workload. Output stays batch-sharded (no forward all-gather).
     """
-    from repro.kernels.ops import _forward, batched_spmm, bwd_impl_for, dvalues
+    from repro.kernels.ops import _forward, backward_db, batched_spmm, dvalues
 
     interpret = resolve_interpret(interpret)
     n = shard_count(mesh, axis)
@@ -156,9 +156,10 @@ def sharded_batched_spmm(
         check_rep=False)
 
     def _bwd_local(rids, cids, nz, values, b_local, dc):
-        db = _forward(cids, rids, nz, values, dc,
-                      impl=bwd_impl_for(concrete), k_pad=None,
-                      interpret=interpret)
+        # dB = Aᵀ·dC per shard: COO index swap, or csr_transpose for the
+        # CSR class (kernels/ops.backward_db — same routing as the local VJP)
+        db = backward_db(rids, cids, nz, values, dc,
+                         impl=concrete, interpret=interpret)
         dval = dvalues(rids, cids, dc, b_local)
         return dval.astype(values.dtype), db.astype(b_local.dtype)
 

@@ -1,0 +1,110 @@
+"""Batched CSR SpMM — the paper's reference layout (Fig. 1/4, §IV-B) as a
+TPU row-split kernel, in the GE-SpMM (arXiv:2007.03179) coalesced
+row-segment style.
+
+The ELL kernel (`batched_spmm_ell.py`) approximates the paper's SWA-CSR by
+padding every row to the BATCH max degree ``k_pad`` — every matrix pays
+``m_pad · k_pad`` slots of bandwidth and arithmetic even when only one row is
+that long. This kernel keeps the CSR arrays flat and bounds the inner loop
+per MATRIX:
+
+- the slot loop runs ``max(rpt[r+1] - rpt[r])`` iterations for THIS matrix —
+  a dynamic trip count read from SMEM (`jax.lax.fori_loop` with a traced
+  bound, the same skew-aware idiom as ``fused_graph_conv.py``), so a batch
+  mixing one dense matrix with many sparse ones stops early on the sparse
+  ones;
+- at slot ``k`` every row gathers its ``rpt[r] + k``-th non-zero from the
+  flat ``col_ids``/``values`` arrays (a sublane-axis ``jnp.take``) and masks
+  rows whose degree is ≤ k (``k < rpt[r+1] - rpt[r]``) — short rows "stop
+  early" by contributing 0.0, the CSR row loop of Fig. 4 vectorized across
+  the sublane axis;
+- the gathered B rows multiply-accumulate into the VMEM-resident output
+  panel, one grid step per (matrix × column panel) exactly like the §2
+  kernels (`grid = (batch, p)`, blocking from the §3 planner).
+
+Row-split means each output row is owned by one reduction — no atomics, no
+races — and the flat nnz arrays mean HBM traffic scales with ``nnz_pad``
+(the real non-zero count, padded to 8) instead of ``m_pad · k_pad``.
+
+``rpt`` enters as host-precomputed ``start = rpt[:, :-1]`` / ``rlen =
+diff(rpt)`` panels (cheap XLA slices) so the kernel never indexes the
+unaligned ``(m_pad + 1,)`` pointer array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.batching import BatchPlan
+from repro.kernels import resolve_interpret
+
+
+def _kernel(rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref, c_ref):
+    start = start_ref[0]                     # (m_pad,) int32 = rpt[:-1]
+    rlen = rlen_ref[0]                       # (m_pad,) int32 = diff(rpt)
+    cid = cid_ref[0]                         # (nnz_pad,) int32, flat
+    val = val_ref[0]                         # (nnz_pad,), flat
+    bb = b_ref[0]                            # (m_pad, n_block)
+    nnz_pad = cid.shape[0]
+
+    def body(k, acc):
+        # row r's k-th non-zero sits at flat slot rpt[r] + k; rows shorter
+        # than k are masked (their clamped gather is multiplied by 0.0)
+        idx = jnp.minimum(start + k, nnz_pad - 1)
+        live = k < rlen                                  # (m_pad,) bool
+        v = jnp.where(live, jnp.take(val, idx, axis=0), 0).astype(jnp.float32)
+        c = jnp.take(cid, idx, axis=0)
+        rows = jnp.take(bb, c, axis=0).astype(jnp.float32)  # sublane gather
+        return acc + v[:, None] * rows
+
+    # rpt-bounded dynamic trip count: THIS matrix's max row degree, from SMEM
+    acc = jax.lax.fori_loop(
+        0, rowmax_ref[0], body, jnp.zeros(c_ref.shape[1:], jnp.float32)
+    )
+    c_ref[0] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def batched_spmm_csr(
+    rpt: jax.Array,       # (batch, m_pad + 1) int32
+    col_ids: jax.Array,   # (batch, nnz_pad) int32, row-sorted (CSR order)
+    values: jax.Array,    # (batch, nnz_pad), row-sorted
+    b: jax.Array,         # (batch, m_pad, n_b)
+    *,
+    plan: BatchPlan,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    batch, m_pad = rpt.shape[0], rpt.shape[1] - 1
+    nnz_pad = col_ids.shape[1]
+    n_b = b.shape[-1]
+    assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+
+    start = rpt[:, :-1]
+    rlen = rpt[:, 1:] - rpt[:, :-1]
+    rowmax = jnp.max(rlen, axis=1).astype(jnp.int32)     # (batch,) loop bound
+
+    n_block, p = plan.n_block, plan.p
+    if n_b % n_block:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(batch, p),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
+        interpret=interpret,
+    )(rowmax, start, rlen, col_ids, values, b)
+    return out[..., :n_b]

@@ -6,6 +6,10 @@ the whole batch. ``impl`` selects:
 
 - ``"ref"``        pure-jnp batched oracle (scatter-add), XLA-fused;
 - ``"pallas_ell"`` Batched SWA-CSR analogue (row-split ELL Pallas kernel);
+- ``"pallas_csr"`` Batched CSR row-split (GE-SpMM style: flat nnz arrays,
+                   rpt-bounded dynamic slot loop — DESIGN.md §9);
+- ``"csr"``        pure-XLA CSR segment-sum reference (same conversion,
+                   searchsorted row recovery + scatter-add);
 - ``"pallas_coo"`` Batched SWA-SparseTensor analogue (one-hot-scatter kernel);
 - ``"dense"``      densify + batched GEMM (the cuBLAS gemmBatched baseline);
 - ``"pallas_gemm"`` densify + MXU Pallas batched GEMM;
@@ -30,18 +34,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import batching
-from repro.core.formats import BatchedCOO, coo_to_dense, coo_to_ell
+from repro.core.formats import (
+    BatchedCOO,
+    BatchedCSR,
+    coo_to_csr,
+    coo_to_dense,
+    coo_to_ell,
+    validate_ell_k_pad,
+)
 from repro.kernels import ref, resolve_interpret
 from repro.kernels.batched_gemm import batched_gemm
 from repro.kernels.batched_spmm_coo import batched_spmm_coo
+from repro.kernels.batched_spmm_csr import batched_spmm_csr
 from repro.kernels.batched_spmm_ell import batched_spmm_ell
 
 # "fused" is the graph-conv layer megakernel (kernels/fused_graph_conv.py):
 # it is selectable wherever a layer-level workload is being resolved
 # (graph_conv_batched / resolve_graph_conv_impl), but is NOT a plain SpMM —
 # batched_spmm(impl="fused") raises with a pointer to the layer entry point.
-IMPLS = ("auto", "ref", "ell", "pallas_ell", "pallas_coo", "dense",
-         "pallas_gemm", "loop", "fused")
+IMPLS = ("auto", "ref", "ell", "pallas_ell", "csr", "pallas_csr",
+         "pallas_coo", "dense", "pallas_gemm", "loop", "fused")
 
 
 def resolve_impl(
@@ -72,6 +84,22 @@ def resolve_impl(
         n_b=n_b, itemsize=b.dtype.itemsize, interpret=interpret)
 
 
+def _csr_forward(csr: BatchedCSR, b, *, impl, interpret):
+    """Run a CSR-class impl on an already-converted :class:`BatchedCSR` —
+    shared by the forward (COO→CSR) and the backward (``csr_transpose``)."""
+    if impl == "csr":
+        return ref.batched_spmm_csr_ref(csr, b)
+    plan = batching.plan_batched_spmm(
+        batch=csr.batch, m_pad=csr.m_pad, n_b=b.shape[-1],
+        slots=csr.nnz_pad, itemsize=b.dtype.itemsize)
+    if plan.case == 3:
+        # Paper case 3: matrices too large for the batched strategy — same
+        # per-sample fallback as the COO/ELL kernels.
+        return ref.batched_spmm_csr_ref(csr, b)
+    return batched_spmm_csr(csr.rpt, csr.col_ids, csr.values, b,
+                            plan=plan, interpret=interpret)
+
+
 def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
     batch, m_pad, n_b = b.shape
     a = BatchedCOO(row_ids, col_ids, values, nnz, jnp.full((batch,), m_pad))
@@ -96,8 +124,17 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
         )
         return batched_gemm(a_dense.astype(b.dtype), b, plan=plan,
                             interpret=interpret)
-    if impl in ("pallas_ell", "ell") and k_pad is None:
-        raise ValueError(f"{impl} requires k_pad (max nnz/row)")
+    if impl in ("csr", "pallas_csr"):
+        return _csr_forward(coo_to_csr(a, m_pad), b, impl=impl,
+                            interpret=interpret)
+    if impl in ("pallas_ell", "ell"):
+        if k_pad is None:
+            raise ValueError(f"{impl} requires k_pad (max nnz/row)")
+        # Silent-drop guard: coo_to_ell zeroes any nnz beyond k_pad in a row.
+        # Eager (concrete) calls raise host-side here; traced calls cannot
+        # branch on data and skip (callers own k_pad sizing under jit —
+        # coo_to_ell(check=True) installs a runtime debug-assert instead).
+        validate_ell_k_pad(a, m_pad, k_pad)
     plan = batching.plan_batched_spmm(
         batch=batch, m_pad=m_pad, n_b=n_b,
         slots=k_pad if impl == "pallas_ell" else row_ids.shape[1],
@@ -125,13 +162,31 @@ def bwd_impl_for(impl: str) -> str:
     """The impl the backward pass (dB = Aᵀ @ dC) runs for a forward ``impl``.
 
     Aᵀ loses the per-row ELL bound, so ELL-class forwards fall back to the
-    COO/scatter class; shared by the local and the mesh-sharded VJP. The
-    fused megakernel's dU = Aᵀ·dZ is itself a plain batched SpMM, so it
-    takes the same COO-class backward.
+    COO/scatter class; CSR-class forwards stay CSR — ``csr_transpose`` is an
+    exact device-side Aᵀ with no per-row bound to lose. Shared by the local
+    and the mesh-sharded VJP. The fused megakernel's dU = Aᵀ·dZ is itself a
+    plain batched SpMM, so it takes the same COO-class backward.
     """
+    if impl in ("csr", "pallas_csr"):
+        return impl
     if impl.startswith("pallas") or impl == "fused":
         return "pallas_coo"
     return impl if impl in ("ref", "loop", "dense") else "ref"
+
+
+def backward_db(row_ids, col_ids, nnz, values, dc, *, impl, interpret):
+    """dB = Aᵀ @ dC for a forward ``impl`` — batched SpMM with the transposed
+    adjacency (paper §IV-D), shared by the local and the mesh-sharded VJP.
+
+    Every class transposes by swapping the COO index arrays (free); for the
+    CSR class ``_forward`` then row-sorts the swapped COO, which IS the
+    device-side transposed CSR in one sort —
+    ``csr_transpose(coo_to_csr(A))`` collapsed, since the VJP still holds
+    the raw COO triples. :func:`repro.core.formats.csr_transpose` is the
+    same Aᵀ for callers that hold only a ``BatchedCSR``.
+    """
+    return _forward(col_ids, row_ids, nnz, values, dc,
+                    impl=bwd_impl_for(impl), k_pad=None, interpret=interpret)
 
 
 def dvalues(row_ids, col_ids, dc, b):
@@ -196,10 +251,11 @@ def batched_spmm(
 
     def bwd(res, dc):
         values, b = res
-        # dB = Aᵀ @ dC — batched SpMM with swapped indices (paper §IV-D:
-        # "The Batched SpMM is also applied to backward propagation").
-        db = _forward(col_ids, row_ids, nnz, values, dc,
-                      impl=bwd_impl_for(impl), k_pad=None, interpret=interpret)
+        # dB = Aᵀ @ dC (paper §IV-D: "The Batched SpMM is also applied to
+        # backward propagation") — COO index swap, or csr_transpose for the
+        # CSR class.
+        db = backward_db(row_ids, col_ids, nnz, values, dc,
+                         impl=impl, interpret=interpret)
         dval = dvalues(row_ids, col_ids, dc, b).astype(values.dtype)
         return dval, db.astype(b.dtype)
 

@@ -190,6 +190,18 @@ class GraphServeEngine:
             lambda adj_arrays, x, n_nodes: apply_gcn(
                 params, cfg, self._rebuild(adj_arrays), x, n_nodes,
                 mesh=mesh))
+        # Degree guard posture (see _validate): only an ELL-class layer impl
+        # silently drops > k_pad nnz/row, so resolve what this engine's
+        # geometry will actually run — EVERY conv layer, since each layer
+        # re-resolves "auto" against its own n_in/n_out workload.
+        impls = {cfg.impl}
+        if cfg.impl == "auto" and cfg.k_pad is not None:
+            from repro.core.gcn import resolve_conv_impls
+
+            impls = {d.impl for d in resolve_conv_impls(
+                cfg, batch, m_pad, nnz_pad, mesh=mesh)}
+        self._ell_degree_guard = (cfg.k_pad is not None
+                                  and bool(impls & {"ell", "pallas_ell"}))
 
     @staticmethod
     def _rebuild(adj_arrays):
@@ -223,10 +235,41 @@ class GraphServeEngine:
         if r.n_nodes > self.m_pad:
             return (f"request {s}: n_nodes={r.n_nodes} exceeds wave "
                     f"m_pad={self.m_pad}; needs a bigger geometry tier")
-        for ch, rows in enumerate(r.rows):
+        # channel-count defects first: zip would silently truncate, letting
+        # an unvalidated channel reach the degree guard / wave assembly
+        if len(r.rows) != self.cfg.channels or len(r.cols) != self.cfg.channels:
+            return (f"request {s}: {len(r.rows)} row / {len(r.cols)} col "
+                    f"channels, engine expects {self.cfg.channels}")
+        for ch, (rows, cols) in enumerate(zip(r.rows, r.cols)):
             if len(rows) > self.nnz_pad:
                 return (f"request {s}, channel {ch}: {len(rows)} edges "
                         f"exceed wave nnz_pad={self.nnz_pad}")
+            if len(rows) != len(cols):
+                return (f"request {s}, channel {ch}: {len(rows)} row ids vs "
+                        f"{len(cols)} col ids")
+            if len(rows):
+                rr, cc = np.asarray(rows), np.asarray(cols)
+                # malformed ids must soft-fail like every other defect —
+                # never raise (a negative id would blow up np.bincount
+                # below, and a huge one would corrupt the wave's scatter)
+                if (int(rr.min()) < 0 or int(cc.min()) < 0
+                        or int(rr.max()) >= r.n_nodes
+                        or int(cc.max()) >= r.n_nodes):
+                    return (f"request {s}, channel {ch}: edge ids outside "
+                            f"[0, n_nodes={r.n_nodes})")
+        if self._ell_degree_guard:
+            # ELL silent-drop guard (ISSUE 5) at the concrete boundary: the
+            # jitted apply cannot data-branch, so a request whose row degree
+            # exceeds cfg.k_pad would get edges silently zeroed by
+            # coo_to_ell — soft-fail it instead. Active only when this
+            # engine's layer impl actually resolves to the ELL class.
+            for ch, rows in enumerate(r.rows):
+                if len(rows):
+                    deg = int(np.bincount(np.asarray(rows, np.int64)).max())
+                    if deg > self.cfg.k_pad:
+                        return (f"request {s}, channel {ch}: max row degree "
+                                f"{deg} exceeds cfg.k_pad={self.cfg.k_pad} "
+                                "(an ELL impl would silently drop edges)")
         return None
 
     def run_wave(self, wave: list[GraphRequest]) -> GraphWaveReport:

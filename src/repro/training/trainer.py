@@ -30,7 +30,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.core.formats import BatchedCOO
+from repro.core.formats import BatchedCOO, validate_ell_k_pad
 from repro.core.gcn import GCNConfig, gcn_loss, init_gcn
 from repro.distributed.compression import ef_init
 from repro.distributed.steps import build_train_step
@@ -176,15 +176,31 @@ class GCNTrainer:
             impl=self.cfg.impl, k_pad=self.cfg.k_pad,
             interpret=self.cfg.interpret, mesh=self.mesh)
 
+    def _replicate(self, tree):
+        if self.mesh is None:
+            return tree
+        repl = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+        return jax.device_put(tree, repl)
+
     def init_state(self):
         params = init_gcn(jax.random.key(self.tcfg.seed), self.cfg)
         state = adam_init(params)
-        if self.mesh is not None:
-            repl = jax.sharding.NamedSharding(
-                self.mesh, jax.sharding.PartitionSpec())
-            params = jax.device_put(params, repl)
-            state = jax.device_put(state, repl)
-        return params, state
+        return self._replicate(params), self._replicate(state)
+
+    def restore_or_init(self):
+        """Resume-from-latest (the LM ``Trainer`` pattern): restore the
+        newest checkpoint's (params, opt-state) and its step counter, or
+        fresh-init at step 0 when the directory holds none. ``fit`` calls
+        this — NOT ``init_state`` — so a restarted trainer continues where
+        the killed one checkpointed instead of silently restarting at step
+        0 and overwriting prior saves."""
+        params, state = self.init_state()
+        latest = self.manager.latest_step()
+        if latest is not None:
+            params, state = self.manager.restore(latest, (params, state))
+            return self._replicate(params), self._replicate(state), latest
+        return params, state, 0
 
     def _place_batch(self, tree):
         """Batch-shard every batch-leading leaf on the mesh's data axis (the
@@ -208,29 +224,68 @@ class GCNTrainer:
         iterator/generator is materialized once so every epoch sees the
         full data (a generator would silently exhaust after epoch 1).
         Checkpoints every ``checkpoint_every`` *steps* (the LM Trainer
-        convention) plus a final save."""
-        params, state = self.init_state()
+        convention) plus a final save.
+
+        Resume: the latest checkpoint in ``tcfg.checkpoint_dir`` is restored
+        (``restore_or_init``) and the first ``start`` batches of the stream
+        are fast-forwarded, so a save→kill→restart sequence continues the
+        same deterministic trajectory instead of re-initializing at step 0
+        and overwriting the saved state."""
+        params, state, start = self.restore_or_init()
         if not callable(batch_iter):
             data = (batch_iter if isinstance(batch_iter, (list, tuple))
                     else list(batch_iter))
             batch_iter = lambda epoch: data  # noqa: E731
         loss = acc = float("nan")
-        step = 0
+        # The jitted step can never data-branch, so the ELL silent-drop
+        # guard (ISSUE 5) lives HERE, at the last concrete boundary: when
+        # any conv layer's impl resolves to an ELL path for this batch's
+        # shapes, an undersized k_pad fails fast instead of silently
+        # zeroing edges in coo_to_ell. The impl resolution is shape-keyed
+        # and memoized; the DATA check (a bincount per sample) runs on
+        # every batch — it is data-dependent, so no object/shape memo can
+        # soundly skip it, and it is trivial next to a training step.
+        ell_candidates = ("ell", "pallas_ell")
+        maybe_ell = (self.cfg.k_pad is not None
+                     and self.cfg.impl in ("auto",) + ell_candidates)
+        ell_by_shape: dict[tuple, bool] = {}
+        step = seen = 0
         for epoch in range(epochs):
             for b in batch_iter(epoch):
+                seen += 1
+                if seen <= start:
+                    continue    # already trained before the restart
+                if maybe_ell:
+                    from repro.core.gcn import resolve_conv_impls
+
+                    key = (b["x"].shape[0], b["x"].shape[1],
+                           max(a.nnz_pad for a in b["adj"]))
+                    if key not in ell_by_shape:
+                        ell_by_shape[key] = (
+                            self.cfg.impl in ell_candidates
+                            or any(d.impl in ell_candidates
+                                   for d in resolve_conv_impls(
+                                       self.cfg, *key,
+                                       itemsize=b["x"].dtype.itemsize,
+                                       mesh=self.mesh)))
+                    if ell_by_shape[key]:
+                        for a in b["adj"]:
+                            validate_ell_k_pad(a, b["x"].shape[1],
+                                               self.cfg.k_pad)
                 adj_arrays = [(a.row_ids, a.col_ids, a.values, a.nnz,
                                a.n_rows) for a in b["adj"]]
                 adj_arrays, x, n_nodes, labels = self._place_batch(
                     (adj_arrays, b["x"], b["n_nodes"], b["labels"]))
                 params, state, loss, acc = self._step(
                     params, state, adj_arrays, x, n_nodes, labels)
-                step += 1
+                step = seen
                 if step % max(self.tcfg.checkpoint_every, 1) == 0:
                     self.manager.save(step, (params, state))
-            rec = {"epoch": epoch + 1, "loss": float(loss),
-                   "acc": float(acc), "time": time.time()}
-            if on_metrics:
-                on_metrics(epoch + 1, rec)
-        if step:
+            if step > start:    # an epoch fully fast-forwarded on resume
+                rec = {"epoch": epoch + 1, "loss": float(loss),
+                       "acc": float(acc), "time": time.time()}
+                if on_metrics:
+                    on_metrics(epoch + 1, rec)
+        if step > start:
             self.manager.save(step, (params, state))
         return params, state, {"loss": float(loss), "acc": float(acc)}

@@ -70,6 +70,29 @@ def test_allow_pallas_switches_backend_not_class():
         assert not d_cpu.impl.startswith("pallas")
 
 
+def test_selector_skewed_degree_picks_csr_class():
+    """avg degree (nnz_pad/m_pad) well below k_pad: the CSR row-split —
+    flat nnz traffic, rpt-bounded loop — beats ELL's padded m_pad·k_pad
+    slots (GE-SpMM's skewed-degree case, DESIGN.md §9)."""
+    w = Workload(batch=100, m_pad=2048, nnz_pad=8192, k_pad=8, n_b=512)
+    d = select_impl(w)
+    assert d.kind == "csr" and d.impl == "pallas_csr", d
+    # the XLA csr fallback is a segment-sum — same scatter traffic as ref
+    # plus the rpt arrays — so the CPU posture legitimately keeps the
+    # scatter class; only the Pallas row-split kernel monetizes the layout
+    d_cpu = select_impl(w, allow_pallas=False)
+    assert d_cpu.kind in ("csr", "scatter")
+
+
+def test_csr_runnable_without_k_pad():
+    """CSR has no per-row bound, so unlike the ELL class it stays a
+    candidate when k_pad is unknown."""
+    w = Workload(batch=100, m_pad=2048, nnz_pad=8192, k_pad=None, n_b=512)
+    impls = {i for i, _ in rank(w)}
+    assert {"csr"} <= impls
+    assert not impls & {"ell", "pallas_ell"}
+
+
 def test_no_k_pad_excludes_ell_class():
     w = Workload(batch=100, m_pad=2048, nnz_pad=8192, k_pad=None, n_b=512)
     d = select_impl(w)
@@ -150,11 +173,14 @@ def test_case_boundaries():
     w1 = Workload(batch=10, m_pad=64, nnz_pad=256, k_pad=8, n_b=64)
     d1 = select_impl(w1)
     assert d1.case == 1 and d1.plan.p == 1
-    # case 2: same rows, wide n_b → panels
+    # case 2: same rows, wide n_b → panels. Avg degree (nnz_pad/m_pad = 4)
+    # is half of k_pad=8, so the row-split class that wins is CSR — flat
+    # nnz traffic — not ELL, which pays the padded m_pad·k_pad slots
+    # (GE-SpMM's skewed-degree case, DESIGN.md §9).
     w2 = Workload(batch=10, m_pad=2048, nnz_pad=8192, k_pad=8, n_b=4096)
     d2 = select_impl(w2)
     assert d2.case == 2 and d2.plan.p > 1
-    assert d2.kind == "ell"
+    assert d2.kind == "csr"
     # case 3: over the LARGE_M threshold
     w3 = Workload(batch=2, m_pad=8200, nnz_pad=16400, k_pad=8, n_b=64)
     d3 = select_impl(w3)
@@ -205,6 +231,38 @@ def test_autotune_measures_and_caches(tmp_path):
     assert all(t > 0 for t in times.values())
     # memoized: second call returns without measuring (same record object)
     assert autotune(w, cache=cache) == best
+
+
+def test_measured_cache_selects_csr_for_fig8_geometry(tmp_path, monkeypatch):
+    """Acceptance (ISSUE 5): ``impl="auto"`` can select a CSR impl for a
+    Fig. 8 geometry via the MEASURED tuning cache, end-to-end through the
+    ``$REPRO_TUNE_CACHE`` default-cache path — and the selected impl matches
+    the oracle."""
+    from repro.autotune import cache as cache_mod
+
+    rng = np.random.default_rng(0)
+    coo, m_pad = random_batch(rng, batch=20, dim=20, nnz_per_row=2)  # fig8
+    b = jnp.asarray(rng.normal(size=(20, m_pad, 64)), jnp.float32)
+    w = Workload(batch=20, m_pad=m_pad, nnz_pad=coo.nnz_pad, k_pad=4, n_b=64)
+
+    path = str(tmp_path / "tune.json")
+    cache = TuningCache(path)
+    # the user-side refresh workflow: measure the CSR class on this exact
+    # workload key and persist the record
+    times = measure_workload(w, ("csr",), interpret=True, warmup=1, iters=2)
+    assert set(times) == {"csr"} and times["csr"] > 0
+    cache.put(w.key(), times, interpret=True)
+
+    monkeypatch.setenv(cache_mod.ENV_VAR, path)
+    cache_mod._cache_for.cache_clear()    # the default cache memoizes by path
+    try:
+        d = resolve_impl(coo, b, impl="auto", k_pad=4)
+        assert d.impl == "csr" and d.source == "cache", d
+        got = np.asarray(batched_spmm(coo, b, impl=d.impl, k_pad=4))
+        want = np.asarray(batched_spmm(coo, b, impl="ref"))
+        np.testing.assert_allclose(got, want, atol=1e-4)
+    finally:
+        cache_mod._cache_for.cache_clear()
 
 
 def test_measure_workload_returns_sane_times():

@@ -16,12 +16,17 @@ try:
 except ModuleNotFoundError:
     HAS_HYPOTHESIS = False
 
+import pytest
+
 from repro.core import (
     coo_from_lists,
     coo_to_csr,
     coo_to_dense,
     coo_to_ell,
+    csr_transpose,
+    max_row_degree,
     random_batch,
+    validate_ell_k_pad,
 )
 from repro.core.spmm import batched_spmm
 from repro.kernels import ref
@@ -30,6 +35,64 @@ from repro.kernels import ref
 def _random_coo(seed, batch, dim, nnz):
     rng = np.random.default_rng(seed)
     return random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+
+
+def test_random_batch_self_loops_never_duplicate():
+    """Regression (ISSUE 5): the §V-A generator used to append a (r, r)
+    self-loop even when rng.choice already sampled the diagonal, so the two
+    unit-valued COO entries summed to 2.0 on densify. Dense adjacencies must
+    be strictly 0/1. Dense dims with high nnz make the collision near-certain
+    pre-fix."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        coo, m_pad = random_batch(rng, batch=6, dim=(4, 12),
+                                  nnz_per_row=(2, 6), self_loops=True)
+        dense = np.asarray(coo_to_dense(coo, m_pad))
+        assert set(np.unique(dense)) <= {0.0, 1.0}, seed
+        # and the diagonal is complete over the real rows (a_uu = 1, §II-A)
+        n_rows = np.asarray(coo.n_rows)
+        for b in range(coo.batch):
+            diag = np.diagonal(dense[b])[: n_rows[b]]
+            np.testing.assert_array_equal(diag, 1.0)
+
+
+def test_coo_to_ell_overflow_raises():
+    """Regression (ISSUE 5): coo_to_ell silently zeroed any nnz beyond k_pad
+    in a row. The checked path and the ops-level ELL guard must both raise
+    host-side on concrete inputs."""
+    r = np.asarray([0, 0, 0, 0, 1], np.int32)     # row 0 holds 4 nnz
+    c = np.asarray([1, 2, 3, 4, 0], np.int32)
+    coo = coo_from_lists([(r, c, np.ones(5, np.float32))], [8])
+    assert int(np.asarray(max_row_degree(coo, 8)).max()) == 4
+    with pytest.raises(ValueError, match="max row degree"):
+        coo_to_ell(coo, 8, 2, check=True)
+    with pytest.raises(ValueError, match="max row degree"):
+        validate_ell_k_pad(coo, 8, 3)
+    b = jnp.ones((1, 8, 4), jnp.float32)
+    for impl in ("ell", "pallas_ell"):
+        with pytest.raises(ValueError, match="max row degree"):
+            batched_spmm(coo, b, impl=impl, k_pad=2)
+    # a correctly sized k_pad passes and is lossless
+    ell = coo_to_ell(coo, 8, 4, check=True)
+    assert float(np.asarray(ell.values).sum()) == 5.0
+    got = np.asarray(batched_spmm(coo, b, impl="ell", k_pad=4))
+    want = np.asarray(batched_spmm(coo, b, impl="ref"))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_csr_transpose_matches_dense_transpose():
+    coo, m_pad = _random_coo(7, 5, (6, 28), (1, 4))
+    csr_t = csr_transpose(coo_to_csr(coo, m_pad), m_pad)
+    # rpt invariants survive the transpose
+    rpt = np.asarray(csr_t.rpt)
+    assert (np.diff(rpt, axis=1) >= 0).all()
+    np.testing.assert_array_equal(rpt[:, -1], np.asarray(coo.nnz))
+    b = jnp.asarray(np.random.default_rng(8).normal(size=(5, m_pad, 12)),
+                    jnp.float32)
+    got = np.asarray(ref.batched_spmm_csr_ref(csr_t, b))
+    want = np.asarray(jax.lax.batch_matmul(
+        coo_to_dense(coo, m_pad).transpose(0, 2, 1), b))
+    np.testing.assert_allclose(got, want, atol=1e-5)
 
 
 def test_csr_roundtrip():

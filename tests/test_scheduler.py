@@ -242,6 +242,46 @@ def test_scheduler_bitwise_matches_per_request_engine(small_setup):
         np.testing.assert_array_equal(solo.logits, p.request.logits)
 
 
+def test_degree_overflow_request_fails_cleanly_not_the_wave(small_setup):
+    """ELL silent-drop guard at the serving boundary (ISSUE 5): a request
+    whose max row degree exceeds cfg.k_pad soft-fails (an ELL impl would
+    silently zero its edges under jit) and the rest of the wave survives."""
+    import dataclasses
+
+    spec, data, cfg, params = small_setup
+    cfg = dataclasses.replace(cfg, impl="ell")   # pin the ELL-class layer
+    assert cfg.k_pad is not None
+    deg = cfg.k_pad + 2
+    hot = GraphRequest(        # one node with `deg` out-edges per channel
+        rows=[np.zeros(deg, np.int32)] * cfg.channels,
+        cols=[np.arange(deg, dtype=np.int32)] * cfg.channels,
+        features=np.zeros((deg + 1, cfg.n_features), np.float32),
+        n_nodes=deg + 1)
+    normal = _reqs(data[:3])
+    engine = GraphServeEngine(params, cfg, batch=4)
+    out = engine.run([hot] + normal)
+    assert hot.failed and not hot.done
+    assert "max row degree" in hot.error
+    assert all(r.done and not r.failed for r in normal)
+
+
+def test_malformed_edge_ids_fail_cleanly_not_the_wave(small_setup):
+    """_validate's never-raises contract extends to malformed requests: a
+    negative or out-of-range edge id soft-fails the request (it would blow
+    up the degree guard's bincount or corrupt the wave's scatter) and the
+    rest of the wave survives."""
+    spec, data, cfg, params = small_setup
+    bad = GraphRequest(
+        rows=[np.asarray([-1, 0], np.int32)] * cfg.channels,
+        cols=[np.asarray([0, 1], np.int32)] * cfg.channels,
+        features=np.zeros((4, cfg.n_features), np.float32), n_nodes=4)
+    normal = _reqs(data[:3])
+    out = GraphServeEngine(params, cfg, batch=4).run([bad] + normal)
+    assert bad.failed and not bad.done
+    assert "edge ids outside" in bad.error
+    assert all(r.done and not r.failed for r in normal)
+
+
 def test_oversize_request_fails_cleanly_not_the_wave(small_setup):
     spec, data, cfg, params = small_setup
     big_nodes = 200

@@ -69,6 +69,70 @@ print("FINAL_STEP", tr.manager.latest_step())
 """
 
 
+def test_gcn_resume_after_interruption(tmp_path):
+    """Regression (ISSUE 5): ``GCNTrainer.fit`` used to call ``init_state()``
+    unconditionally — checkpoints written by ``manager.save`` were never
+    restored and the step counter restarted at 0, silently overwriting the
+    saved trajectory. Save → kill (fresh trainer == fresh process: only the
+    checkpoint dir survives) → resume."""
+    from repro.core.gcn import GCNConfig
+    from repro.data.graphs import GraphDatasetSpec, batches, generate
+    from repro.training import GCNTrainer, TrainerConfig
+
+    spec = GraphDatasetSpec.tox21_like(n_samples=8)
+    ck = str(tmp_path / "gcn_ck")
+    cfg = GCNConfig.tox21()
+    tcfg = TrainerConfig(checkpoint_dir=ck, checkpoint_every=1)
+    batches_a = list(batches(generate(spec), spec, 4, seed=0))   # 2 steps
+    t1 = GCNTrainer(cfg, tcfg=tcfg)
+    p1, _, _ = t1.fit(batches_a, epochs=1)
+    assert t1.manager.latest_step() == 2
+
+    # restore_or_init resumes the saved params AND the step counter
+    t2 = GCNTrainer(cfg, tcfg=tcfg)
+    p2, _, start = t2.restore_or_init()
+    assert start == 2
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    # resume over DIFFERENT data with the same step budget: every batch is
+    # already trained, so fit fast-forwards and returns the restored params
+    # untouched. Pre-fix this re-inits, trains the new data from step 0 and
+    # overwrites the saved checkpoints — the params would differ.
+    spec_b = GraphDatasetSpec.tox21_like(n_samples=8, seed=1)
+    batches_b = list(batches(generate(spec_b), spec_b, 4, seed=1))
+    t3 = GCNTrainer(cfg, tcfg=tcfg)
+    p3, _, _ = t3.fit(batches_b, epochs=1)
+    assert t3.manager.latest_step() == 2
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    # a longer budget continues training past the restored step
+    t4 = GCNTrainer(cfg, tcfg=tcfg)
+    t4.fit(batches_b, epochs=2)          # 4 batches: skip 2, train 2
+    assert t4.manager.latest_step() == 4
+    assert t4.restore_or_init()[2] == 4
+
+
+def test_gcn_trainer_rejects_undersized_k_pad(tmp_path):
+    """ELL silent-drop guard at the trainer's concrete boundary (ISSUE 5):
+    a cfg.k_pad smaller than the data's true max row degree must fail fast
+    instead of letting a jitted ELL path silently zero edges."""
+    from repro.core.gcn import GCNConfig
+    from repro.data.graphs import GraphDatasetSpec, batches, generate
+    from repro.training import GCNTrainer, TrainerConfig
+
+    spec = GraphDatasetSpec.tox21_like(n_samples=8)
+    bs = list(batches(generate(spec), spec, 4, seed=0))
+    # pinned ELL impl: generated molecules reach degree > 1, so k_pad=1
+    # WOULD silently corrupt — the guard must fire before the jitted step
+    cfg = GCNConfig.tox21(k_pad=1, impl="ell")
+    trainer = GCNTrainer(cfg, tcfg=TrainerConfig(
+        checkpoint_dir=str(tmp_path), checkpoint_every=1000))
+    with pytest.raises(ValueError, match="max row degree"):
+        trainer.fit(bs, epochs=1)
+
+
 def test_resume_after_interruption(tmp_path):
     """Train 10 steps (checkpoint at 5, 10); then a second process resumes
     from step 10 and continues to 15 — restart-after-kill path."""
