@@ -1,0 +1,127 @@
+"""Reduced-precision sweep (DESIGN.md §10): bf16/i8 kernel variants vs their
+f32 base impls on the paper's Fig. 8–10 geometries.
+
+Two measurements per geometry, persisted to ``BENCH_precision.json``:
+
+- **speedup** — each XLA-lowered reduced variant timed against ITS OWN f32
+  base impl on identical inputs (``ell`` vs ``ell_bf16``, ``csr`` vs
+  ``csr_bf16``) — the same-class comparison ``impl="auto"`` ranks when a
+  layer opts into a dtype policy. Pallas variants are interpret-mode Python
+  on CPU (correctness paths, never timed here — the cost model prices their
+  TPU bytes);
+- **max-abs-error** — EVERY variant's forward output against the f32 ref
+  oracle, the measured counterpart of the tolerance table in
+  tests/oracle.py. Rows publish ``dtype=…`` and ``maxerr=…`` markers that
+  ``benchmarks/check_bench_json.py`` gates per-dtype in CI.
+
+The ``precision/summary/auto`` row records what ``impl="auto"`` actually
+selects under a bf16 policy on each geometry and the best measured
+same-class speedup among geometries where it picked a reduced variant —
+``reduced_selected=1`` + ``best_speedup>=1.0`` is the ISSUE 6 acceptance
+gate (also enforced by check_bench_json.py).
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_formats import GEOMETRIES, SMOKE
+from benchmarks.common import row, time_fn
+from repro.autotune import PRECISION_IMPLS, Workload, precision_of, select_impl
+from repro.core import max_row_degree, random_batch
+from repro.core.spmm import batched_spmm
+
+# XLA-lowered (wall-clockable on CPU) variant → base pairs; the Pallas
+# variants appear in the accuracy rows only.
+TIMED_VARIANTS = ("ell_bf16", "csr_bf16")
+
+
+def _inputs(name: str, batch, dim, nnz, n_b):
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+    b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
+    k_pad = int(np.asarray(max_row_degree(coo, m_pad)).max())
+    return coo, m_pad, b, k_pad
+
+
+def _max_abs_error(coo, b, k_pad, impl) -> float:
+    want = np.asarray(batched_spmm(coo, b, impl="ref"), np.float32)
+    got = np.asarray(batched_spmm(coo, b, impl=impl, k_pad=k_pad),
+                     np.float32)
+    return float(np.max(np.abs(got - want))) if want.size else 0.0
+
+
+def sweep_geometry(name: str, batch, dim, nnz, n_b, *, iters: int = 10):
+    """Per-geometry: time each timed variant vs its f32 base, record the
+    auto decision under a bf16 policy. Returns (selected impl, measured
+    same-class speedup of the selection — 0.0 when auto stayed f32)."""
+    coo, m_pad, b, k_pad = _inputs(name, batch, dim, nnz, n_b)
+    speedups: dict[str, float] = {}
+    for variant in TIMED_VARIANTS:
+        base = precision_of(variant)[0]
+        t_base = time_fn(
+            jax.jit(functools.partial(batched_spmm, impl=base, k_pad=k_pad)),
+            coo, b, warmup=2, iters=iters)
+        t_var = time_fn(
+            jax.jit(functools.partial(batched_spmm, impl=variant,
+                                      k_pad=k_pad)),
+            coo, b, warmup=2, iters=iters)
+        speedups[variant] = t_base / t_var
+        err = _max_abs_error(coo, b, k_pad, variant)
+        row(f"precision/{name}/{variant}", t_var * 1e6,
+            f"dtype={precision_of(variant)[1]} base={base} "
+            f"speedup={speedups[variant]:.2f} maxerr={err:.4f}")
+
+    w = Workload(batch=coo.batch, m_pad=m_pad, nnz_pad=coo.nnz_pad,
+                 k_pad=k_pad, n_b=n_b, itemsize=4, dtype="bf16")
+    selected = select_impl(w, allow_pallas=False).impl
+    speedup = speedups.get(selected, 0.0)
+    row(f"precision/{name}/auto", 0.0,
+        f"impl={selected} speedup={speedup:.2f}")
+    return selected, speedup
+
+
+def accuracy_rows(smoke: bool = False):
+    """Forward max-abs-error of EVERY registered variant (Pallas ones run
+    interpret-mode) on the skew geometry — the measured face of the oracle
+    tolerance table."""
+    geo = (SMOKE if smoke else GEOMETRIES)["fig10"]
+    coo, m_pad, b, k_pad = _inputs("fig10", *geo)
+    for variant in PRECISION_IMPLS:
+        if precision_of(variant)[0] == "fused":
+            continue            # layer-class: exercised in bench_fused
+        err = _max_abs_error(coo, b, k_pad, variant)
+        row(f"precision/accuracy/{variant}", 0.0,
+            f"dtype={precision_of(variant)[1]} maxerr={err:.4f}")
+
+
+def main(smoke: bool = False):
+    geos = SMOKE if smoke else GEOMETRIES
+    best_impl, best = "", 0.0
+    for name, (batch, dim, nnz, n_b) in geos.items():
+        selected, speedup = sweep_geometry(name, batch, dim, nnz, n_b,
+                                           iters=5 if smoke else 10)
+        if speedup > best:
+            best_impl, best = selected, speedup
+    accuracy_rows(smoke=smoke)
+    reduced = int(best_impl in PRECISION_IMPLS and best > 0.0)
+    # the ISSUE 6 acceptance row: auto (under a bf16 policy) picked a
+    # reduced variant that measured >= 1.0x against its own f32 base on at
+    # least one Fig. 8-10 geometry. check_bench_json.py gates this.
+    row("precision/summary/auto", 0.0,
+        f"impl={best_impl or 'none'} reduced_selected={reduced} "
+        f"best_speedup={best:.2f}")
+    return {"impl": best_impl, "best_speedup": best}
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.common import header
+
+    header()
+    main(smoke="--smoke" in sys.argv)

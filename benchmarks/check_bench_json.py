@@ -12,6 +12,17 @@ Two classes of failure, both cheap to hit when a harness regresses silently:
    inverted — the harness or the kernel it guards broke, not timing noise.
    Free-form ``...x`` annotations (like the fused bench's CPU wall ratios)
    are NOT guarded; only the explicit ``ratio=`` marker opts a row in.
+3. **Precision gates** (``BENCH_precision.json`` only, suite="precision"):
+   every row publishing ``maxerr=`` must stay within the per-dtype error
+   ceiling (the measured counterpart of the tests/oracle.py tolerance
+   table), and the ``precision/summary/auto`` row must report
+   ``reduced_selected=1`` with ``best_speedup>=1.0`` — the ISSUE 6
+   acceptance: ``impl="auto"`` under a bf16 policy picks a reduced variant
+   that measured at least parity against its own f32 base on one of the
+   Fig. 8–10 geometries. Note the precision rows use a ``speedup=`` marker,
+   not ``ratio=`` — a same-class dtype comparison on a paper geometry is
+   real measurement (gated at 1.0 on the summary's best), not the
+   ≥-1.0-by-construction ``best=`` rows the loose MIN_RATIO floor guards.
 
 Exit code 1 with one line per problem; silent 0 otherwise.
 
@@ -30,6 +41,60 @@ REQUIRED_TOP = ("suite", "backend", "rows")
 REQUIRED_ROW = ("name", "us_per_call", "derived")
 RATIO_RE = re.compile(r"(?:^|[ ,;])ratio=([-+0-9.eE]+)")
 MIN_RATIO = 0.5
+
+# --- precision-suite gates (class 3 above) -------------------------------
+MAXERR_RE = re.compile(r"(?:^|[ ,;])maxerr=([-+0-9.eE]+)")
+DTYPE_RE = re.compile(r"(?:^|[ ,;])dtype=(\w+)")
+# per-dtype forward max-abs-error ceilings vs the f32 ref oracle, sized
+# ~2x above the tests/oracle.py tolerances (bench geometries are larger
+# than the oracle cases, so storage rounding accumulates more slack)
+MAX_ERR = {"f32": 1e-4, "bf16": 0.15, "i8": 0.5}
+SUMMARY_ROW = "precision/summary/auto"
+SUMMARY_RE = re.compile(
+    r"reduced_selected=([01]).*best_speedup=([-+0-9.eE]+)")
+MIN_BEST_SPEEDUP = 1.0
+
+
+def _check_precision_rows(path, rows) -> list[str]:
+    errors: list[str] = []
+    summary = None
+    for i, r in enumerate(rows):
+        derived = str(r.get("derived", ""))
+        m = MAXERR_RE.search(derived)
+        if m:
+            dt = DTYPE_RE.search(derived)
+            bound = MAX_ERR.get(dt.group(1)) if dt else None
+            if bound is None:
+                errors.append(
+                    f"{path.name}: rows[{i}] ({r.get('name')}) has maxerr= "
+                    f"but no recognised dtype= in derived={derived!r}")
+            elif float(m.group(1)) > bound:
+                errors.append(
+                    f"{path.name}: rows[{i}] ({r.get('name')}) maxerr="
+                    f"{float(m.group(1))} > {bound} for dtype="
+                    f"{dt.group(1)} — precision regression")
+        if r.get("name") == SUMMARY_ROW:
+            summary = (i, derived)
+    if summary is None:
+        errors.append(f"{path.name}: missing required row {SUMMARY_ROW!r}")
+        return errors
+    i, derived = summary
+    m = SUMMARY_RE.search(derived)
+    if not m:
+        errors.append(
+            f"{path.name}: rows[{i}] ({SUMMARY_ROW}) unparseable summary "
+            f"derived={derived!r}")
+        return errors
+    if m.group(1) != "1":
+        errors.append(
+            f"{path.name}: {SUMMARY_ROW} reduced_selected=0 — impl=\"auto\""
+            " never picked a reduced-precision variant (ISSUE 6 gate)")
+    if float(m.group(2)) < MIN_BEST_SPEEDUP:
+        errors.append(
+            f"{path.name}: {SUMMARY_ROW} best_speedup={float(m.group(2))}"
+            f" < {MIN_BEST_SPEEDUP} — reduced variant lost to its f32 base"
+            " on every Fig. 8-10 geometry (ISSUE 6 gate)")
+    return errors
 
 
 def check_file(path: pathlib.Path) -> list[str]:
@@ -59,6 +124,8 @@ def check_file(path: pathlib.Path) -> list[str]:
                 errors.append(
                     f"{path.name}: rows[{i}] ({r.get('name')}) reports "
                     f"ratio={ratio} < {MIN_RATIO} — regression guard")
+    if doc.get("suite") == "precision":
+        errors.extend(_check_precision_rows(path, doc.get("rows", [])))
     return errors
 
 

@@ -23,6 +23,12 @@ from benchmarks.common import header, results_snapshot, write_bench_json
 # suites whose rows are persisted as BENCH_<name>.json at the repo root so
 # the perf trajectory stays machine-readable across PRs
 PERSISTED = {"fused", "serve", "formats"}
+# persisted only on full runs: the precision speedup gate (check_bench_json
+# enforces best_speedup >= 1.0 on the summary row) needs paper-scale
+# geometries to amortize the cast overhead — smoke shapes would overwrite
+# the committed artifact with sub-1.0 noise. Smoke still RUNS the suite so
+# a broken variant fails CI; it just doesn't persist.
+FULL_ONLY_PERSISTED = {"precision"}
 
 
 def _smoke_suites():
@@ -32,6 +38,7 @@ def _smoke_suites():
         bench_fig10,
         bench_formats,
         bench_fused,
+        bench_precision,
     )
 
     def decisions():
@@ -62,6 +69,7 @@ def _smoke_suites():
         ("formats", lambda: bench_formats.main(smoke=True)),
         ("auto", decisions),
         ("serve", lambda: bench_serve.graph_sweep(smoke=True)),
+        ("precision", lambda: bench_precision.main(smoke=True)),
     ]
 
 
@@ -86,6 +94,7 @@ def main() -> None:
             bench_fused,
             bench_kernel_breakdown,
             bench_moe,
+            bench_precision,
             bench_serve,
         )
 
@@ -100,6 +109,7 @@ def main() -> None:
             ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
             ("moe", lambda: bench_moe.main()),
             ("serve", lambda: bench_serve.main(persist=False)),
+            ("precision", lambda: bench_precision.main()),
         ]
     failed = []
     for name, fn in suites:
@@ -113,7 +123,9 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
             continue
-        if name in PERSISTED:
+        persist = name in PERSISTED or (
+            name in FULL_ONLY_PERSISTED and not args.smoke)
+        if persist:
             path = write_bench_json(name, start=start, extra=extra)
             print(f"wrote {path}", file=sys.stderr)
     if failed:

@@ -18,9 +18,11 @@ from repro.autotune.cache import (  # noqa: F401
     measure_workload,
 )
 from repro.autotune.cost_model import (  # noqa: F401
+    PRECISION_IMPLS,
     Workload,
     estimate,
     estimate_layer,
+    precision_of,
     rank,
     rank_layer,
     spmm_plan,
@@ -36,7 +38,8 @@ from repro.autotune.selector import (  # noqa: F401
 
 __all__ = [
     "ENV_VAR", "TuningCache", "autotune", "default_cache", "measure_workload",
-    "Workload", "estimate", "estimate_layer", "rank", "rank_layer",
-    "spmm_plan", "KINDS", "Decision", "forced_decision", "resolve_auto",
-    "select_graph_conv_impl", "select_impl",
+    "PRECISION_IMPLS", "Workload", "estimate", "estimate_layer",
+    "precision_of", "rank", "rank_layer", "spmm_plan", "KINDS", "Decision",
+    "forced_decision", "resolve_auto", "select_graph_conv_impl",
+    "select_impl",
 ]

@@ -25,7 +25,7 @@ import json
 import os
 import tempfile
 
-from repro.autotune.cost_model import Workload, rank, rank_layer
+from repro.autotune.cost_model import Workload, precision_of, rank, rank_layer
 
 ENV_VAR = "REPRO_TUNE_CACHE"
 _VERSION = 1
@@ -137,9 +137,13 @@ def measure_workload(
         if ell_lossy:
             # ELL cannot represent this workload losslessly (more slots
             # than m_pad·k_pad cells) — timing its candidates would measure
-            # a silently truncated product and poison the cache record
-            impls = tuple(i for i in impls if i not in ("ell", "pallas_ell"))
-    elif ell_lossy and any(i in ("ell", "pallas_ell") for i in impls):
+            # a silently truncated product and poison the cache record.
+            # Class membership via precision_of so bf16/i8 ELL variants are
+            # filtered too.
+            impls = tuple(i for i in impls
+                          if precision_of(i)[0] not in ("ell", "pallas_ell"))
+    elif ell_lossy and any(precision_of(i)[0] in ("ell", "pallas_ell")
+                           for i in impls):
         # an EXPLICITLY requested unmeasurable impl must fail loudly, not
         # silently vanish from the record
         raise ValueError(

@@ -52,8 +52,49 @@ from __future__ import annotations
 import dataclasses
 import functools
 
-from repro.analysis.roofline import HW
-from repro.core.batching import (
+# Reduced-precision kernel variants (DESIGN.md §10): variant impl →
+# (base impl, storage policy). The base impl defines the execution structure
+# (and therefore the roofline branch); the policy defines the bytes each
+# value/index element costs on the wire. "bf16" stores values, features and
+# column indices (int16) at 2 bytes; "i8" stores values as int8 quantization
+# codes (1 byte) + int16 indices while B and the output stay at the caller's
+# f32. Every variant accumulates in f32 inside the kernel.
+PRECISION_IMPLS = {
+    "ell_bf16": ("ell", "bf16"),
+    "csr_bf16": ("csr", "bf16"),
+    "pallas_ell_bf16": ("pallas_ell", "bf16"),
+    "pallas_csr_bf16": ("pallas_csr", "bf16"),
+    "pallas_coo_bf16": ("pallas_coo", "bf16"),
+    "pallas_ell_i8": ("pallas_ell", "i8"),
+    "pallas_csr_i8": ("pallas_csr", "i8"),
+    "fused_bf16": ("fused", "bf16"),
+}
+
+
+def precision_of(impl: str) -> tuple[str, str]:
+    """(base impl, storage policy) for any registry impl — ("csr", "bf16")
+    for a variant, (impl, "f32") for the full-precision impls."""
+    return PRECISION_IMPLS.get(impl, (impl, "f32"))
+
+
+def _traffic(policy: str, itemsize: int) -> tuple[int, int, int, int]:
+    """(value, index, feature, output) bytes-per-element under a storage
+    policy. f32 keeps the legacy accounting (4-byte indices, caller
+    itemsize elsewhere) so full-precision estimates are unchanged."""
+    if policy == "bf16":
+        return 2, 2, 2, 2
+    if policy == "i8":
+        return 1, 2, itemsize, itemsize
+    return itemsize, 4, itemsize, itemsize
+
+
+# These imports sit BELOW the variant registry on purpose: repro.core's
+# package __init__ pulls in kernels/ops.py, which imports PRECISION_IMPLS /
+# precision_of from this module at import time. Keeping the registry above
+# the repro.core import makes that re-entrant import find the names bound
+# even while this module is still initializing.
+from repro.analysis.roofline import HW  # noqa: E402
+from repro.core.batching import (  # noqa: E402
     CHUNK,
     BatchPlan,
     plan_batched_gemm,
@@ -103,14 +144,19 @@ class Workload:
     channels: int | None = None
     n_in: int | None = None
     nnz_avg: int | None = None
+    dtype: str = "f32"      # precision policy: "f32" | "bf16" | "i8"
 
     def key(self) -> str:
-        """Stable string key for the persistent tuning cache (DESIGN.md §5)."""
+        """Stable string key for the persistent tuning cache (DESIGN.md §5).
+        The dtype suffix appears only for reduced-precision policies so every
+        pre-existing f32 cache entry keeps its key."""
         k = self.k_pad if self.k_pad is not None else 0
         base = (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
                 f"_k{k}_n{self.n_b}_i{self.itemsize}")
         if self.channels is not None:
             base += f"_c{self.channels}_nin{self.n_in or 0}"
+        if self.dtype != "f32":
+            base += f"_d{self.dtype}"
         return base
 
     def shard(self, n_shards: int) -> "Workload":
@@ -128,13 +174,18 @@ def spmm_plan(w: Workload, impl: str | None = None) -> BatchPlan:
     accounting as kernels/ops.py: ``k_pad`` slots for the ELL kernel,
     ``nnz_pad`` (COO) slots for everything else. ``impl=None`` means
     "best available" (ELL accounting when k_pad is known). The case-3
-    boundary depends only on m_pad, so it is identical either way."""
-    if impl in (None, "ell", "pallas_ell") and w.k_pad is not None:
+    boundary depends only on m_pad, so it is identical either way.
+    Precision variants plan as their base impl; the bf16 policy blocks at
+    2-byte elements (the features are cast too), the i8 policy keeps the
+    caller itemsize (B and the output stay f32)."""
+    base, policy = (None, "f32") if impl is None else precision_of(impl)
+    if base in (None, "ell", "pallas_ell") and w.k_pad is not None:
         slots = w.k_pad
     else:
         slots = w.nnz_pad
+    itemsize = 2 if policy == "bf16" else w.itemsize
     return plan_batched_spmm(batch=w.batch, m_pad=w.m_pad, n_b=w.n_b,
-                             slots=slots, itemsize=w.itemsize)
+                             slots=slots, itemsize=itemsize)
 
 
 def _roofline(flops: float, bytes_: float, unit_peak: float,
@@ -143,70 +194,83 @@ def _roofline(flops: float, bytes_: float, unit_peak: float,
 
 
 def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
-    """Estimated seconds for one batched call of ``impl`` on workload ``w``."""
-    vpu_peak = hw.peak_flops / 16.0           # vector (non-MXU) arithmetic
-    out_bytes = w.batch * w.m_pad * w.n_b * w.itemsize
-    b_bytes = w.batch * w.m_pad * w.n_b * w.itemsize
+    """Estimated seconds for one batched call of ``impl`` on workload ``w``.
 
-    if impl in ("ref", "loop"):
-        gather = w.batch * w.nnz_pad * w.n_b * w.itemsize
-        idx = w.batch * w.nnz_pad * 8
+    Precision variants reuse their base impl's roofline branch with the
+    policy's bytes-per-element (``_traffic``): same execution structure,
+    cheaper wire traffic. The pricing follows the IMPL's policy, not
+    ``w.dtype`` — on a bf16-policy workload the full-precision candidates
+    still pay full-precision bytes, which is exactly why a variant can
+    out-rank its base."""
+    base, policy = precision_of(impl)
+    f32_path = policy == "f32"
+    vb, ib, fb, ob = _traffic(policy, w.itemsize)
+    vpu_peak = hw.peak_flops / 16.0           # vector (non-MXU) arithmetic
+    out_bytes = w.batch * w.m_pad * w.n_b * ob
+    b_bytes = w.batch * w.m_pad * w.n_b * fb
+
+    if base in ("ref", "loop"):
+        gather = w.batch * w.nnz_pad * w.n_b * fb
+        idx = w.batch * w.nnz_pad * (8 if f32_path else 2 * ib)
         flops = 2.0 * w.batch * w.nnz_pad * w.n_b
         bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
         t = _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
-        if impl == "loop":
+        if base == "loop":
             # sequential per-sample execution: no cross-sample overlap, one
             # step latency per sample — the Fig. 2 structure.
             t = w.batch * (t / w.batch + SCAN_STEP_OVERHEAD)
         return t
 
-    if impl in ("ell", "pallas_ell"):
+    if base in ("ell", "pallas_ell"):
         if w.k_pad is None:
             return float("inf")
         slots = w.batch * w.m_pad * w.k_pad
         flops = 2.0 * slots * w.n_b
-        if impl == "ell":
-            bytes_ = slots * (w.n_b * w.itemsize + 8) + out_bytes
+        if base == "ell":
+            bytes_ = slots * (w.n_b * fb + (8 if f32_path else ib + vb)) \
+                + out_bytes
             return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
-        plan = spmm_plan(w, "pallas_ell")
+        plan = spmm_plan(w, impl)
         if plan.case == 3:
             return float("inf")   # kernels/ops.py falls back before Pallas
         # per (matrix × panel) grid step: B panel + ELL arrays read from HBM,
         # output panel written once; gathers happen VMEM-side.
-        per_step = (w.m_pad * plan.n_block * w.itemsize
-                    + w.m_pad * w.k_pad * (w.itemsize + 4))
+        per_step = (w.m_pad * plan.n_block * fb
+                    + w.m_pad * w.k_pad
+                    * ((w.itemsize + 4) if f32_path else (vb + ib)))
         bytes_ = w.batch * plan.p * per_step + out_bytes
         steps = w.batch * plan.p
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
-    if impl in ("csr", "pallas_csr"):
+    if base in ("csr", "pallas_csr"):
         # static stand-in for the kernel's dynamic per-matrix row bound
         row_bound = w.k_pad if w.k_pad is not None else max(
             1, -(-w.nnz_pad // w.m_pad))
-        if impl == "csr":
+        if base == "csr":
             # segment-sum reference: ref's gather/scatter traffic + rpt
-            gather = w.batch * w.nnz_pad * w.n_b * w.itemsize
-            idx = w.batch * (w.nnz_pad * 8 + w.m_pad * 4)
+            gather = w.batch * w.nnz_pad * w.n_b * fb
+            idx = w.batch * (w.nnz_pad * (8 if f32_path else 2 * ib)
+                             + w.m_pad * 4)
             flops = 2.0 * w.batch * w.nnz_pad * w.n_b
             bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
             return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
-        plan = spmm_plan(w, "pallas_csr")
+        plan = spmm_plan(w, impl)
         if plan.case == 3:
             return float("inf")   # kernels/ops.py falls back before Pallas
         flops = 2.0 * w.batch * w.m_pad * row_bound * w.n_b
         # per (matrix × panel) grid step: B panel + FLAT cid/val arrays +
-        # start/rlen row pointers; output panel written once.
-        per_step = (w.m_pad * plan.n_block * w.itemsize
-                    + w.nnz_pad * (4 + w.itemsize)
+        # start/rlen row pointers (always int32); output panel written once.
+        per_step = (w.m_pad * plan.n_block * fb
+                    + w.nnz_pad * ((4 + w.itemsize) if f32_path else (ib + vb))
                     + 2 * w.m_pad * 4)
         bytes_ = w.batch * plan.p * per_step + out_bytes
         steps = w.batch * plan.p
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
-    if impl == "pallas_coo":
-        plan = spmm_plan(w, "pallas_coo")
+    if base == "pallas_coo":
+        plan = spmm_plan(w, impl)
         if plan.case == 3:
             return float("inf")
         chunks = -(-w.nnz_pad // _COO_CHUNK)
@@ -214,15 +278,16 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         # (chunk × matrix × panel)
         flops = (2.0 * w.batch * plan.p * chunks * _COO_CHUNK
                  * w.m_pad * plan.n_block)
-        per_step = (w.m_pad * plan.n_block * w.itemsize
-                    + chunks * _COO_CHUNK * (8 + w.itemsize))
+        per_step = (w.m_pad * plan.n_block * fb
+                    + chunks * _COO_CHUNK
+                    * ((8 + w.itemsize) if f32_path else (2 * ib + vb)))
         bytes_ = w.batch * plan.p * per_step + out_bytes
         steps = w.batch * plan.p
         eff = _mxu_eff(w.m_pad, plan.n_block)
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
-    if impl == "fused":
+    if base == "fused":
         # Fused graph-conv megakernel (DESIGN.md §7): per (matrix × panel)
         # grid step, `channels` MXU feature transforms + one-hot-scatter
         # SpMMs accumulate into one VMEM panel; intermediates never touch
@@ -231,7 +296,8 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
             return float("inf")   # not a layer workload — fused can't run
         plan = plan_fused_graph_conv(
             batch=w.batch, m_pad=w.m_pad, n_in=w.n_in, n_out=w.n_b,
-            channels=w.channels, nnz_pad=w.nnz_pad, itemsize=w.itemsize)
+            channels=w.channels, nnz_pad=w.nnz_pad,
+            itemsize=2 if policy == "bf16" else w.itemsize)
         if plan.case == 3:
             return float("inf")
         nnz_eff = w.nnz_avg if w.nnz_avg is not None else w.nnz_pad
@@ -239,9 +305,10 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         steps = w.batch * plan.p
         flops = (2.0 * steps * w.channels * w.m_pad * plan.n_block
                  * (w.n_in + chunks * _COO_CHUNK))
-        per_step = (w.m_pad * w.n_in * w.itemsize                   # X panel
-                    + w.channels * w.n_in * plan.n_block * w.itemsize  # W
-                    + w.channels * chunks * _COO_CHUNK * (8 + w.itemsize))
+        per_step = (w.m_pad * w.n_in * fb                           # X panel
+                    + w.channels * w.n_in * plan.n_block * fb       # W
+                    + w.channels * chunks * _COO_CHUNK
+                    * ((8 + w.itemsize) if f32_path else (2 * ib + vb)))
         bytes_ = steps * per_step + out_bytes       # output written ONCE
         eff = _mxu_eff(w.m_pad, plan.n_block)
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
@@ -262,6 +329,23 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
     raise ValueError(f"unknown impl {impl!r}")
 
 
+def _candidates(dtype: str, allow_pallas: bool) -> list[str]:
+    """The SpMM candidate ladder for a precision policy. ``dtype="f32"``
+    reproduces the legacy candidate set exactly; reduced policies ADD their
+    variants next to the full-precision impls (the model decides whether the
+    byte savings beat f32, it is never forced)."""
+    cands = ["ref", "ell", "csr", "dense", "loop"]
+    if dtype in ("bf16", "i8"):
+        cands += ["ell_bf16", "csr_bf16"]
+    if allow_pallas:
+        cands += ["pallas_ell", "pallas_csr", "pallas_coo", "pallas_gemm"]
+        if dtype in ("bf16", "i8"):
+            cands += ["pallas_ell_bf16", "pallas_csr_bf16", "pallas_coo_bf16"]
+        if dtype == "i8":
+            cands += ["pallas_ell_i8", "pallas_csr_i8"]
+    return cands
+
+
 @functools.lru_cache(maxsize=4096)
 def rank(w: Workload, *, allow_pallas: bool = True,
          hw: HW = HW()) -> tuple[tuple[str, float], ...]:
@@ -269,12 +353,11 @@ def rank(w: Workload, *, allow_pallas: bool = True,
 
     ``allow_pallas=False`` (the CPU/interpret posture — Pallas interpret mode
     is a Python emulator, never a performance path) restricts candidates to
-    the XLA-lowered impls.
+    the XLA-lowered impls. ``w.dtype`` widens the ladder with the matching
+    reduced-precision variants (DESIGN.md §10).
     """
-    candidates = ["ref", "ell", "csr", "dense", "loop"]
-    if allow_pallas:
-        candidates += ["pallas_ell", "pallas_csr", "pallas_coo", "pallas_gemm"]
-    scored = [(i, estimate(w, i, hw)) for i in candidates]
+    scored = [(i, estimate(w, i, hw)) for i in _candidates(w.dtype,
+                                                           allow_pallas)]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))
 
@@ -291,8 +374,8 @@ def estimate_layer(w: Workload, impl: str, hw: HW = HW()) -> float:
     """
     if w.channels is None or w.n_in is None:
         raise ValueError(f"not a layer workload (channels/n_in unset): {w}")
-    if impl == "fused":
-        return estimate(w, "fused", hw)
+    if precision_of(impl)[0] == "fused":
+        return estimate(w, impl, hw)
     stacked = dataclasses.replace(w, batch=w.batch * w.channels,
                                   channels=None, n_in=None, nnz_avg=None)
     t_spmm = estimate(stacked, impl, hw)
@@ -322,12 +405,14 @@ def rank_layer(w: Workload, *, allow_pallas: bool = True,
 
     Candidates are the SpMM impls of :func:`rank` (each priced as the stacked
     fallback layer) plus ``"fused"`` when Pallas is allowed — the megakernel
-    is Pallas-only, so the CPU/interpret posture never selects it.
+    is Pallas-only, so the CPU/interpret posture never selects it. Reduced
+    policies add ``fused_bf16`` alongside the SpMM variants.
     """
-    candidates = ["ref", "ell", "csr", "dense", "loop"]
+    candidates = _candidates(w.dtype, allow_pallas)
     if allow_pallas:
-        candidates += ["pallas_ell", "pallas_csr", "pallas_coo",
-                       "pallas_gemm", "fused"]
+        candidates += ["fused"]
+        if w.dtype in ("bf16", "i8"):
+            candidates += ["fused_bf16"]
     scored = [(i, estimate_layer(w, i, hw)) for i in candidates]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))

@@ -27,25 +27,37 @@ from __future__ import annotations
 import dataclasses
 
 from repro.analysis.roofline import HW
-from repro.autotune.cost_model import Workload, rank, rank_layer, spmm_plan
+from repro.autotune.cost_model import (
+    PRECISION_IMPLS,
+    Workload,
+    precision_of,
+    rank,
+    rank_layer,
+    spmm_plan,
+)
 from repro.core.batching import BatchPlan, plan_fused_graph_conv
 
 
 def _layer_plan(w: Workload, impl: str) -> BatchPlan:
     """The blocking plan a layer impl runs: the fused megakernel's own plan
-    for ``"fused"``, the stacked (channels·batch) SpMM plan otherwise."""
-    if impl == "fused":
+    for the fused class (variants block at their policy's element size), the
+    stacked (channels·batch) SpMM plan otherwise."""
+    base, policy = precision_of(impl)
+    if base == "fused":
         return plan_fused_graph_conv(
             batch=w.batch, m_pad=w.m_pad, n_in=w.n_in or 0, n_out=w.n_b,
-            channels=w.channels or 1, nnz_pad=w.nnz_pad, itemsize=w.itemsize)
+            channels=w.channels or 1, nnz_pad=w.nnz_pad,
+            itemsize=2 if policy == "bf16" else w.itemsize)
     return spmm_plan(dataclasses.replace(
         w, batch=w.batch * (w.channels or 1), channels=None, n_in=None,
         nnz_avg=None), impl)
 
 # impl string → kernel class, for tests and reporting: the class is the
 # decision the paper's policy makes; pallas-vs-XLA within a class is a
-# backend posture (allow_pallas), not a policy change. "fused" is its own
-# class: the graph-conv layer megakernel (DESIGN.md §7).
+# backend posture (allow_pallas), not a policy change, and a precision
+# variant keeps its base impl's class (DESIGN.md §10 — precision is a
+# storage policy, not an execution structure). "fused" is its own class:
+# the graph-conv layer megakernel (DESIGN.md §7).
 KINDS = {
     "ref": "scatter", "loop": "scatter",
     "ell": "ell", "pallas_ell": "ell",
@@ -54,6 +66,7 @@ KINDS = {
     "dense": "gemm", "pallas_gemm": "gemm",
     "fused": "fused",
 }
+KINDS.update({v: KINDS[base] for v, (base, _) in PRECISION_IMPLS.items()})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,16 +196,19 @@ def resolve_auto(
     itemsize: int,
     interpret: bool = True,
     cache=None,
+    dtype: str = "f32",
 ) -> Decision:
     """Entry point used by ``kernels/ops.py``: build the Workload from the
     static shapes of one ``batched_spmm`` call and select.
 
     ``interpret=True`` (the CPU posture) disables Pallas candidates — in
     interpret mode they are Python emulation, correct but never fastest.
+    ``dtype`` is the caller's precision policy: ``"bf16"``/``"i8"`` admit
+    the matching reduced-precision variants to the ranking.
     """
     if cache is None:
         from repro.autotune.cache import default_cache
         cache = default_cache()
     w = Workload(batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=k_pad,
-                 n_b=n_b, itemsize=itemsize)
+                 n_b=n_b, itemsize=itemsize, dtype=dtype)
     return select_impl(w, allow_pallas=not interpret, cache=cache)

@@ -1,5 +1,6 @@
 """The paper's primary contribution: batched SpMM for GCNs."""
 from repro.core.formats import (  # noqa: F401
+    INT16_MAX,
     BatchedCOO,
     BatchedCSR,
     BatchedELL,
@@ -9,6 +10,8 @@ from repro.core.formats import (  # noqa: F401
     coo_to_ell,
     csr_transpose,
     max_row_degree,
+    narrow_col_ids,
+    quantize_values_i8,
     random_batch,
     validate_ell_k_pad,
 )

@@ -24,6 +24,52 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# Largest row/column index an int16 column-id array can address. The COO
+# kernels pad row_ids with the sentinel value ``m_pad`` (one past the last
+# row), so the narrowing guard requires m_pad itself — not just m_pad - 1 —
+# to fit.
+INT16_MAX = 32767
+
+
+def narrow_col_ids(ids: jax.Array, m_pad: int) -> jax.Array:
+    """Narrow an int32 index array to int16 storage (half the index traffic
+    of the reduced-precision kernel variants — DESIGN.md §10).
+
+    ``m_pad`` is the exclusive index bound AND the padding sentinel the COO
+    kernels append, so the guard is on ``m_pad`` itself. The bound is a
+    static shape, so overflow raises host-side — under jit too — instead of
+    silently wrapping negative on device.
+    """
+    if m_pad > INT16_MAX:
+        raise ValueError(
+            f"m_pad={m_pad} does not fit int16 column indices (max "
+            f"{INT16_MAX} including the m_pad padding sentinel): use a "
+            "full-precision impl for this geometry")
+    return ids.astype(jnp.int16)
+
+
+def quantize_values_i8(values: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-matrix symmetric int8 quantization of a batched values array.
+
+    Returns ``(codes, scale)``: ``codes`` int8 with the input's shape,
+    ``scale`` (batch,) float32 such that ``codes * scale ≈ values``. The
+    scale is ``maxabs / 127`` per matrix (1.0 for all-zero matrices so
+    dequantization stays well-defined); padded slots are 0.0 and quantize
+    to code 0, preserving the §IV-C padding invariant. Because SpMM is
+    linear in the values, the scale can be applied to the f32 accumulator
+    *after* the kernel — the quantized product is exactly
+    ``scale · SpMM(codes, B)``, so the only error is the rounding of the
+    codes themselves.
+    """
+    v = values.astype(jnp.float32)
+    axes = tuple(range(1, v.ndim))
+    maxabs = jnp.max(jnp.abs(v), axis=axes)
+    scale = jnp.where(maxabs > 0, maxabs / 127.0, 1.0).astype(jnp.float32)
+    codes = jnp.round(
+        v / scale.reshape((-1,) + (1,) * (v.ndim - 1))).astype(jnp.int8)
+    return codes, scale
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BatchedCOO:

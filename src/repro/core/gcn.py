@@ -39,6 +39,10 @@ class GCNConfig:
                                   # adaptive dispatch, DESIGN.md §5/§7)
     k_pad: int = 8                # max nnz/row for the ELL path
     batched: bool = True          # Fig. 7 (True) vs Fig. 6 (False)
+    precision: str = "f32"        # layer dtype policy under impl="auto"
+                                  # ("f32"|"bf16"|"i8", DESIGN.md §10);
+                                  # training keeps f32, serving may opt
+                                  # into bf16 via GraphServeEngine
     interpret: bool | None = None  # None → repro.kernels.default_interpret()
                                    # ($REPRO_INTERPRET, auto-False on TPU)
     bn_mode: str = "batch"        # "batch": stats over the whole wave (the
@@ -100,10 +104,13 @@ def resolve_conv_impls(cfg: GCNConfig, batch: int, m_pad: int, nnz_pad: int,
     interpret = resolve_interpret(cfg.interpret)
     decisions = []
     n_in = cfg.n_features
+    dtype = (autotune.precision_of(cfg.impl)[1] if cfg.impl != "auto"
+             else cfg.precision)
     for n_out in cfg.conv_widths:
         w = autotune.Workload(
             batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=cfg.k_pad,
-            n_b=n_out, itemsize=itemsize, channels=cfg.channels, n_in=n_in)
+            n_b=n_out, itemsize=itemsize, channels=cfg.channels, n_in=n_in,
+            dtype=dtype)
         if mesh is not None:
             from repro.distributed.spmm import shard_count
 
@@ -162,7 +169,7 @@ def apply_gcn(
         if cfg.batched:
             h = graph_conv_batched(conv_p, adj, h, impl=cfg.impl,
                                    k_pad=cfg.k_pad, interpret=cfg.interpret,
-                                   mesh=mesh)
+                                   mesh=mesh, precision=cfg.precision)
         else:
             h = graph_conv_nonbatched(conv_p, adj, h)
         h = _batch_norm(bn_p, h * mask, mask, cfg.bn_mode)

@@ -25,7 +25,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BatchedCOO
+from repro.core.formats import BatchedCOO, narrow_col_ids
 from repro.core.spmm import batched_spmm
 from repro.kernels import resolve_interpret
 from repro.kernels.ref import spmm_coo_single
@@ -84,22 +84,26 @@ def resolve_graph_conv_impl(
     interpret: bool | None = None,
     mesh=None,
     mesh_axis: str = "data",
+    precision: str = "f32",
 ):
     """Resolve ``impl`` against the LAYER workload of one graph-conv call.
 
     Returns a :class:`repro.autotune.Decision`; candidates include the fused
     megakernel next to every SpMM impl (each priced as the stacked fallback
-    layer). With ``mesh=``, resolution runs against the per-shard workload —
-    the shapes each device actually executes (DESIGN.md §6).
+    layer), and — under a reduced ``precision`` policy — their bf16/i8
+    variants (DESIGN.md §10). With ``mesh=``, resolution runs against the
+    per-shard workload — the shapes each device actually executes
+    (DESIGN.md §6).
     """
     from repro import autotune
 
     interpret = resolve_interpret(interpret)
     batch, m_pad, n_in = x.shape
+    dtype = autotune.precision_of(impl)[1] if impl != "auto" else precision
     w = autotune.Workload(
         batch=batch, m_pad=m_pad, nnz_pad=max(a.nnz_pad for a in adj),
         k_pad=k_pad, n_b=n_out, itemsize=x.dtype.itemsize,
-        channels=len(adj), n_in=n_in)
+        channels=len(adj), n_in=n_in, dtype=dtype)
     if mesh is not None:
         from repro.distributed.spmm import shard_count
 
@@ -120,6 +124,7 @@ def graph_conv_batched(
     interpret: bool | None = None,
     mesh=None,
     epilogue: str = "none",
+    precision: str = "f32",
 ) -> jax.Array:
     """Paper Fig. 7 and beyond: the whole mini-batch's layer in O(1) ops.
 
@@ -129,12 +134,21 @@ def graph_conv_batched(
     applied inside the fused kernel when it runs, as an XLA op otherwise —
     identical numerics either way.
 
+    ``precision`` ("f32"|"bf16"|"i8") is the layer's dtype policy under
+    ``impl="auto"`` (DESIGN.md §10); pinning a variant impl (e.g.
+    ``"fused_bf16"``) applies its policy directly. The bf16 megakernel
+    variant casts values/X/W/bias to bfloat16 and narrows the index storage
+    to int16 before dispatch; the f32 accumulator lives in the kernel and
+    the output is cast back to X's dtype.
+
     ``mesh=`` shards the batch axis over the mesh's ``"data"`` axis
     (DESIGN.md §6): the fused megakernel dispatches per shard via
     ``distributed.spmm.sharded_fused_graph_conv``; the fallback's stacked
     SpMM runs through ``sharded_batched_spmm`` with the dense ops GSPMD
     partitions around it.
     """
+    from repro.autotune.cost_model import precision_of
+
     interpret = resolve_interpret(interpret)
     channels = len(adj)
     n_out = params["w"].shape[-1]
@@ -142,27 +156,42 @@ def graph_conv_batched(
     if impl == "auto":
         concrete = resolve_graph_conv_impl(
             adj, x, n_out, impl="auto", k_pad=k_pad, interpret=interpret,
-            mesh=mesh).impl
+            mesh=mesh, precision=precision).impl
 
-    if concrete == "fused":
+    base, policy = precision_of(concrete)
+    if base == "fused":
         rids, cids, vals, nnz = stack_channels(adj)
+        xx, ww, bb = x, params["w"], params["b"]
+        if policy == "bf16":
+            m_pad = x.shape[1]
+            rids = narrow_col_ids(rids, m_pad)
+            cids = narrow_col_ids(cids, m_pad)
+            vals = vals.astype(jnp.bfloat16)
+            xx = xx.astype(jnp.bfloat16)
+            ww = ww.astype(jnp.bfloat16)
+            bb = bb.astype(jnp.bfloat16)
         if mesh is not None:
             from repro.distributed.spmm import sharded_fused_graph_conv
 
-            return sharded_fused_graph_conv(
-                rids, cids, vals, nnz, x, params["w"], params["b"],
-                mesh=mesh, epilogue=epilogue, interpret=interpret)
-        from repro.kernels.fused_graph_conv import fused_graph_conv
+            y = sharded_fused_graph_conv(
+                rids, cids, vals, nnz, xx, ww, bb,
+                mesh=mesh, epilogue=epilogue, interpret=interpret,
+                impl=concrete)
+        else:
+            from repro.kernels.fused_graph_conv import fused_graph_conv
 
-        return fused_graph_conv(rids, cids, vals, nnz, x,
-                                params["w"], params["b"],
-                                epilogue=epilogue, interpret=interpret)
+            y = fused_graph_conv(rids, cids, vals, nnz, xx, ww, bb,
+                                 epilogue=epilogue, interpret=interpret,
+                                 impl=concrete)
+        return y.astype(x.dtype) if policy != "f32" else y
 
     # Stacked fallback: ONE feature-transform einsum over all channels, ONE
     # (channels·batch) Batched SpMM, one channel-sum — 4·channels ops → 3.
     # On a mesh with impl="auto", keep "auto" so the sharded path re-resolves
     # against the per-shard stacked workload it actually runs (DESIGN.md §6);
-    # otherwise pin the layer-resolved (or caller-pinned) impl.
+    # otherwise pin the layer-resolved (or caller-pinned) impl. A variant
+    # SpMM impl (e.g. "ell_bf16") applies its storage policy inside
+    # batched_spmm.
     spmm_impl = "auto" if impl == "auto" and mesh is not None else concrete
     batch, m_pad = x.shape[0], x.shape[1]
     u = jnp.einsum("bmn,cnf->cbmf", x, params["w"]) \
@@ -170,7 +199,7 @@ def graph_conv_batched(
     a_flat = flatten_channels(adj)
     c = batched_spmm(a_flat, u.reshape(channels * batch, m_pad, n_out),
                      impl=spmm_impl, k_pad=k_pad, interpret=interpret,
-                     mesh=mesh)                          # BATCHEDSPMM (one op)
+                     mesh=mesh, precision=precision)     # BATCHEDSPMM (one op)
     y = jnp.sum(c.reshape(channels, batch, m_pad, n_out), axis=0)  # SUM
     return jnp.maximum(y, 0.0) if epilogue == "relu" else y
 

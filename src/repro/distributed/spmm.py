@@ -88,21 +88,26 @@ def resolve_sharded_impl(
     impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool | None = None,
+    precision: str = "f32",
 ):
     """Resolve ``impl`` against the PER-SHARD workload shapes.
 
     Returns an :class:`repro.autotune.Decision` whose ``plan``/``scores``
     describe one shard's call — batch ``ceil(batch / n_shards)``, everything
     else unchanged — which is the workload each device actually runs.
+    ``precision`` admits the reduced-precision variants under ``impl="auto"``
+    exactly like the local path (DESIGN.md §10).
     """
     from repro import autotune
 
     interpret = resolve_interpret(interpret)
     n = shard_count(mesh, axis)
     batch, m_pad, n_b = b.shape
+    dtype = autotune.precision_of(impl)[1] if impl != "auto" else precision
     w = autotune.Workload(batch=batch, m_pad=m_pad,
                           nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
-                          n_b=n_b, itemsize=b.dtype.itemsize).shard(n)
+                          n_b=n_b, itemsize=b.dtype.itemsize,
+                          dtype=dtype).shard(n)
     if impl != "auto":
         return autotune.forced_decision(w, impl, note=f" ({n}-way sharded)")
     return autotune.select_impl(w, allow_pallas=not interpret,
@@ -118,26 +123,29 @@ def sharded_batched_spmm(
     impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool | None = None,
+    precision: str = "f32",
 ) -> jax.Array:
     """C[s] = A[s] @ B[s] with the batch axis sharded over ``mesh[axis]``.
 
     Semantically identical to :func:`repro.kernels.ops.batched_spmm` (the
     per-shard kernels are the same code); differentiable in ``a.values`` and
     ``b`` with batch-sharded cotangents. ``impl="auto"`` resolves against the
-    per-shard workload. Output stays batch-sharded (no forward all-gather).
+    per-shard workload (``precision`` admits reduced-precision variants to
+    that ranking). Output stays batch-sharded (no forward all-gather).
     """
     from repro.kernels.ops import _forward, backward_db, batched_spmm, dvalues
 
     interpret = resolve_interpret(interpret)
     n = shard_count(mesh, axis)
     if n == 1:
-        return batched_spmm(a, b, impl=impl, k_pad=k_pad, interpret=interpret)
+        return batched_spmm(a, b, impl=impl, k_pad=k_pad, interpret=interpret,
+                            precision=precision)
 
     batch = b.shape[0]
     a, b, pad = pad_batch(a, b, n)
     concrete = resolve_sharded_impl(
         a, b, mesh, axis=axis, impl=impl, k_pad=k_pad,
-        interpret=interpret).impl
+        interpret=interpret, precision=precision).impl
 
     spec = P(axis)      # dim-0 (batch) sharding for every operand
     row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
@@ -196,6 +204,7 @@ def sharded_fused_graph_conv(
     axis: str = "data",
     epilogue: str = "none",
     interpret: bool | None = None,
+    impl: str = "fused",
 ) -> jax.Array:
     """The fused graph-conv megakernel (DESIGN.md §7) with the batch axis
     sharded over ``mesh[axis]``: each shard runs ONE fused ``pallas_call``
@@ -221,7 +230,8 @@ def sharded_fused_graph_conv(
     n = shard_count(mesh, axis)
     if n == 1:
         return fused_graph_conv(row_ids, col_ids, values, nnz, x, w, bias,
-                                epilogue=epilogue, interpret=interpret)
+                                epilogue=epilogue, interpret=interpret,
+                                impl=impl)
 
     batch, channels, nnz_pad = row_ids.shape
     m_pad, n_in = x.shape[1], x.shape[2]
@@ -244,7 +254,7 @@ def sharded_fused_graph_conv(
             f"m_pad={plan.m_pad} is planner case 3 (> LARGE_M): use the "
             "unfused graph_conv_batched fallback")
     chunks = runtime_chunks(nnz)
-    bwd_impl = bwd_impl_for("fused") if not interpret else "ref"
+    bwd_impl = bwd_impl_for(impl) if not interpret else "ref"
 
     spec, repl = P(axis), P()
     rids, cids = row_ids, col_ids

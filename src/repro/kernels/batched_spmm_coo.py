@@ -34,8 +34,10 @@ def _kernel(rid_ref, cid_ref, val_ref, b_ref, c_ref, *, m_pad: int, chunks: int)
 
     def body(i, acc):
         sl = pl.dslice(i * CHUNK, CHUNK)
-        rid = rid_ref[0, sl]                         # (CHUNK,)
-        cid = cid_ref[0, sl]
+        # ids may be narrowed int16 storage (DESIGN.md §10); widen to int32
+        # for the take / iota compare — Mosaic wants 32-bit indices
+        rid = rid_ref[0, sl].astype(jnp.int32)       # (CHUNK,)
+        cid = cid_ref[0, sl].astype(jnp.int32)
         val = val_ref[0, sl].astype(jnp.float32)
         g = jnp.take(bb, cid, axis=0).astype(jnp.float32) * val[:, None]
         p = (rid[:, None] == row_iota).astype(jnp.float32)   # (CHUNK, m_pad)

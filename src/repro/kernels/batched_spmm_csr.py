@@ -43,10 +43,18 @@ from repro.core.batching import BatchPlan
 from repro.kernels import resolve_interpret
 
 
-def _kernel(rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref, c_ref):
+def _kernel(*refs, has_scale: bool):
+    if has_scale:
+        (scale_ref, rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref,
+         c_ref) = refs
+    else:
+        rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref, c_ref = refs
+        scale_ref = None
     start = start_ref[0]                     # (m_pad,) int32 = rpt[:-1]
     rlen = rlen_ref[0]                       # (m_pad,) int32 = diff(rpt)
-    cid = cid_ref[0]                         # (nnz_pad,) int32, flat
+    # col ids may be narrowed int16 storage (DESIGN.md §10); widen to int32
+    # before the B gather — Mosaic requires 32-bit take indices
+    cid = cid_ref[0]                         # (nnz_pad,) int32/int16, flat
     val = val_ref[0]                         # (nnz_pad,), flat
     bb = b_ref[0]                            # (m_pad, n_block)
     nnz_pad = cid.shape[0]
@@ -57,7 +65,7 @@ def _kernel(rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref, c_ref):
         idx = jnp.minimum(start + k, nnz_pad - 1)
         live = k < rlen                                  # (m_pad,) bool
         v = jnp.where(live, jnp.take(val, idx, axis=0), 0).astype(jnp.float32)
-        c = jnp.take(cid, idx, axis=0)
+        c = jnp.take(cid, idx, axis=0).astype(jnp.int32)
         rows = jnp.take(bb, c, axis=0).astype(jnp.float32)  # sublane gather
         return acc + v[:, None] * rows
 
@@ -65,17 +73,23 @@ def _kernel(rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref, c_ref):
     acc = jax.lax.fori_loop(
         0, rowmax_ref[0], body, jnp.zeros(c_ref.shape[1:], jnp.float32)
     )
+    if has_scale:
+        # int8 path: values are quantization codes; the reduction is linear
+        # in them, so the per-matrix dequantization scale applies once to the
+        # f32 accumulator.
+        acc = acc * scale_ref[0]
     c_ref[0] = acc.astype(c_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
 def batched_spmm_csr(
     rpt: jax.Array,       # (batch, m_pad + 1) int32
-    col_ids: jax.Array,   # (batch, nnz_pad) int32, row-sorted (CSR order)
-    values: jax.Array,    # (batch, nnz_pad), row-sorted
+    col_ids: jax.Array,   # (batch, nnz_pad) int32/int16, row-sorted
+    values: jax.Array,    # (batch, nnz_pad); int8 codes when scale given
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
+    scale: jax.Array | None = None,   # (batch,) f32 dequantization scale
     interpret: bool | None = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
@@ -92,19 +106,26 @@ def batched_spmm_csr(
     if n_b % n_block:
         b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
 
+    in_specs = [
+        pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+    ]
+    operands = [rowmax, start, rlen, col_ids, values, b]
+    if scale is not None:
+        in_specs.insert(0, pl.BlockSpec((1,), lambda i, j: (i,),
+                                        memory_space=pltpu.SMEM))
+        operands.insert(0, scale.astype(jnp.float32))
+
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, has_scale=scale is not None),
         grid=(batch, p),
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
         interpret=interpret,
-    )(rowmax, start, rlen, col_ids, values, b)
+    )(*operands)
     return out[..., :n_b]

@@ -23,14 +23,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.batching import BatchPlan
 from repro.kernels import resolve_interpret
 
 
-def _kernel(cid_ref, val_ref, b_ref, c_ref, *, k_pad: int):
-    cid = cid_ref[0]            # (m_pad, k_pad) int32
-    val = val_ref[0]            # (m_pad, k_pad)
+def _kernel(*refs, k_pad: int, has_scale: bool):
+    if has_scale:
+        scale_ref, cid_ref, val_ref, b_ref, c_ref = refs
+    else:
+        cid_ref, val_ref, b_ref, c_ref = refs
+        scale_ref = None
+    # col ids may arrive as narrowed int16 storage (DESIGN.md §10); widen to
+    # int32 before the gather — Mosaic requires 32-bit take indices
+    cid = cid_ref[0].astype(jnp.int32)      # (m_pad, k_pad)
+    val = val_ref[0]            # (m_pad, k_pad); f32/bf16 or int8 codes
     bb = b_ref[0]               # (m_pad, n_block)
     acc = jnp.zeros(c_ref.shape[1:], jnp.float32)
     for k in range(k_pad):      # static unroll; k_pad is small (nnz/row max)
@@ -38,16 +46,22 @@ def _kernel(cid_ref, val_ref, b_ref, c_ref, *, k_pad: int):
         acc = acc + val[:, k].astype(jnp.float32)[:, None] * rows.astype(
             jnp.float32
         )
+    if has_scale:
+        # int8 path: values are quantization codes; SpMM is linear in them,
+        # so the per-matrix dequantization scale applies to the f32
+        # accumulator exactly once, after the reduction.
+        acc = acc * scale_ref[0]
     c_ref[0] = acc.astype(c_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
 def batched_spmm_ell(
-    col_ids: jax.Array,   # (batch, m_pad, k_pad) int32
-    values: jax.Array,    # (batch, m_pad, k_pad)
+    col_ids: jax.Array,   # (batch, m_pad, k_pad) int32 or int16
+    values: jax.Array,    # (batch, m_pad, k_pad); int8 codes when scale given
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
+    scale: jax.Array | None = None,   # (batch,) f32 dequantization scale
     interpret: bool | None = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
@@ -59,16 +73,23 @@ def batched_spmm_ell(
         pad = p * n_block - n_b
         b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
 
+    in_specs = [
+        pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+    ]
+    operands = [col_ids, values, b]
+    if scale is not None:
+        in_specs.insert(0, pl.BlockSpec((1,), lambda i, j: (i,),
+                                        memory_space=pltpu.SMEM))
+        operands.insert(0, scale.astype(jnp.float32))
+
     out = pl.pallas_call(
-        functools.partial(_kernel, k_pad=k_pad),
+        functools.partial(_kernel, k_pad=k_pad, has_scale=scale is not None),
         grid=(batch, p),
-        in_specs=[
-            pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
         interpret=interpret,
-    )(col_ids, values, b)
+    )(*operands)
     return out[..., :n_b]

@@ -66,8 +66,10 @@ def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
 
         def body(i, a, u=u, ch=ch):
             sl = pl.dslice(i * CHUNK, CHUNK)
-            rid = rid_ref[0, ch, sl]                      # (CHUNK,)
-            cid = cid_ref[0, ch, sl]
+            # ids may be narrowed int16 storage (DESIGN.md §10); widen to
+            # int32 for the take / iota compare
+            rid = rid_ref[0, ch, sl].astype(jnp.int32)    # (CHUNK,)
+            cid = cid_ref[0, ch, sl].astype(jnp.int32)
             val = val_ref[0, ch, sl].astype(jnp.float32)
             g = jnp.take(u, cid, axis=0) * val[:, None]
             p1 = (rid[:, None] == row_iota).astype(jnp.float32)
@@ -229,6 +231,7 @@ def fused_graph_conv(
     epilogue: str = "none",
     residual: jax.Array | None = None,
     interpret: bool | None = None,
+    impl: str = "fused",
 ) -> jax.Array:
     """Y = epilogue(Σ_ch A_ch·(X·W_ch + b_ch) [+ residual]) in ONE device op.
 
@@ -251,7 +254,7 @@ def fused_graph_conv(
             "graph_conv_batched fallback")
     chunks = runtime_chunks(nnz)
     from repro.kernels.ops import bwd_impl_for
-    bwd_impl = bwd_impl_for("fused") if not interpret else "ref"
+    bwd_impl = bwd_impl_for(impl) if not interpret else "ref"
     has_res = residual is not None
     rids, cids = row_ids, col_ids
 

@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.autotune.cost_model import PRECISION_IMPLS, precision_of
 from repro.core import batching
 from repro.core.formats import (
     BatchedCOO,
@@ -40,6 +41,8 @@ from repro.core.formats import (
     coo_to_csr,
     coo_to_dense,
     coo_to_ell,
+    narrow_col_ids,
+    quantize_values_i8,
     validate_ell_k_pad,
 )
 from repro.kernels import ref, resolve_interpret
@@ -52,8 +55,12 @@ from repro.kernels.batched_spmm_ell import batched_spmm_ell
 # it is selectable wherever a layer-level workload is being resolved
 # (graph_conv_batched / resolve_graph_conv_impl), but is NOT a plain SpMM —
 # batched_spmm(impl="fused") raises with a pointer to the layer entry point.
+# The reduced-precision variants (…_bf16 / …_i8, DESIGN.md §10) are distinct
+# registry entries: each runs its base impl's execution structure with a
+# cheaper storage policy and an f32 accumulator.
 IMPLS = ("auto", "ref", "ell", "pallas_ell", "csr", "pallas_csr",
-         "pallas_coo", "dense", "pallas_gemm", "loop", "fused")
+         "pallas_coo", "dense", "pallas_gemm", "loop",
+         "fused") + tuple(PRECISION_IMPLS)
 
 
 def resolve_impl(
@@ -63,12 +70,16 @@ def resolve_impl(
     impl: str = "auto",
     k_pad: int | None = None,
     interpret: bool | None = None,
+    precision: str = "f32",
 ):
     """Resolve ``impl="auto"`` to the concrete impl for this call's shapes.
 
     Returns an ``repro.autotune.Decision`` (``.impl`` is the concrete
     string); a concrete ``impl`` passes through as a forced Decision so
-    callers can introspect either path uniformly.
+    callers can introspect either path uniformly. ``precision`` is the
+    caller's dtype policy (``"f32"``/``"bf16"``/``"i8"``): under
+    ``impl="auto"`` it admits the matching reduced-precision variants to the
+    ranking; a concrete impl carries its own policy and ignores it.
     """
     from repro import autotune
 
@@ -77,35 +88,86 @@ def resolve_impl(
     if impl != "auto":
         w = autotune.Workload(batch=batch, m_pad=m_pad,
                               nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
-                              n_b=n_b, itemsize=b.dtype.itemsize)
+                              n_b=n_b, itemsize=b.dtype.itemsize,
+                              dtype=precision_of(impl)[1])
         return autotune.forced_decision(w, impl)
     return autotune.resolve_auto(
         batch=batch, m_pad=m_pad, nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
-        n_b=n_b, itemsize=b.dtype.itemsize, interpret=interpret)
+        n_b=n_b, itemsize=b.dtype.itemsize, interpret=interpret,
+        dtype=precision)
 
 
-def _csr_forward(csr: BatchedCSR, b, *, impl, interpret):
+def resolve_compute_dtype(a_dtype, b_dtype):
+    """The deliberate mixed-dtype policy of the GEMM-class impls (DESIGN.md
+    §10): compute in the PROMOTED dtype of the two operands so a
+    full-precision operand is never silently downcast. Same lattice the
+    precision variants use — bf16 meets f32 at f32."""
+    return jnp.promote_types(a_dtype, b_dtype)
+
+
+def _csr_forward(csr: BatchedCSR, b, *, impl, interpret, scale=None,
+                 narrow=False):
     """Run a CSR-class impl on an already-converted :class:`BatchedCSR` —
-    shared by the forward (COO→CSR) and the backward (``csr_transpose``)."""
+    shared by the forward (COO→CSR) and the backward (``csr_transpose``).
+
+    ``scale`` is the i8 policy's per-matrix dequantization factor (applied to
+    the f32 accumulator — in-kernel on the Pallas path, post-hoc on the XLA
+    fallbacks); ``narrow`` stores column ids as int16 on the Pallas wire."""
     if impl == "csr":
-        return ref.batched_spmm_csr_ref(csr, b)
+        out = ref.batched_spmm_csr_ref(csr, b)
+        return out if scale is None else out * scale[:, None, None]
     plan = batching.plan_batched_spmm(
         batch=csr.batch, m_pad=csr.m_pad, n_b=b.shape[-1],
         slots=csr.nnz_pad, itemsize=b.dtype.itemsize)
     if plan.case == 3:
         # Paper case 3: matrices too large for the batched strategy — same
         # per-sample fallback as the COO/ELL kernels.
-        return ref.batched_spmm_csr_ref(csr, b)
-    return batched_spmm_csr(csr.rpt, csr.col_ids, csr.values, b,
-                            plan=plan, interpret=interpret)
+        out = ref.batched_spmm_csr_ref(csr, b)
+        return out if scale is None else out * scale[:, None, None]
+    cids = narrow_col_ids(csr.col_ids, csr.m_pad) if narrow else csr.col_ids
+    return batched_spmm_csr(csr.rpt, cids, csr.values, b,
+                            plan=plan, scale=scale, interpret=interpret)
 
 
 def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
+    """Dispatch one batched SpMM forward. A precision variant (DESIGN.md §10)
+    decomposes into (base impl, storage policy): bf16 casts values and the
+    dense operand to bfloat16 (f32 accumulate in-kernel, output cast back to
+    the caller's dtype); i8 quantizes values to int8 codes with a per-matrix
+    f32 scale applied once to the accumulator (exact, by linearity) while the
+    dense operand stays full-precision. Both narrow the Pallas-side index
+    storage to int16 behind :func:`repro.core.formats.narrow_col_ids`'s
+    host-side overflow guard."""
+    base, policy = precision_of(impl)
+    out_dtype = b.dtype
+    scale = None
+    if policy == "bf16":
+        values = values.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
+    elif policy == "i8":
+        values, scale = quantize_values_i8(values)
+    out = _forward_base(row_ids, col_ids, nnz, values, b, impl=impl,
+                        base=base, k_pad=k_pad, interpret=interpret,
+                        scale=scale, narrow=policy != "f32")
+    # Reduced policies restore the caller's dtype; the f32 path returns the
+    # branch's own result dtype (the GEMM class may deliberately PROMOTE on
+    # mixed-dtype inputs — see resolve_compute_dtype).
+    return out if policy == "f32" else out.astype(out_dtype)
+
+
+def _forward_base(row_ids, col_ids, nnz, values, b, *, impl, base, k_pad,
+                  interpret, scale, narrow):
     batch, m_pad, n_b = b.shape
     a = BatchedCOO(row_ids, col_ids, values, nnz, jnp.full((batch,), m_pad))
-    if impl == "ref":
-        return ref.batched_spmm_coo_ref(a, b, m_pad)
-    if impl == "loop":
+
+    def dequant(out):
+        # XLA fallback for the i8 policy: the kernel-side accumulator scale,
+        # applied after the (linear) unscaled SpMM of the codes
+        return out if scale is None else out * scale[:, None, None]
+
+    if base == "ref":
+        return dequant(ref.batched_spmm_coo_ref(a, b, m_pad))
+    if base == "loop":
         # Non-batched baseline: sequential per-sample SpMM (paper Fig. 2 / the
         # "TF" bars in Fig. 8). Structured as a scan so each sample is its own
         # sequential step, like one kernel launch per sample.
@@ -115,19 +177,23 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
 
         _, out = jax.lax.scan(step, None, (row_ids, col_ids, values, b))
         return out
-    if impl in ("dense", "pallas_gemm"):
+    if base in ("dense", "pallas_gemm"):
         a_dense = coo_to_dense(a, m_pad)
-        if impl == "dense":
-            return ref.batched_gemm_ref(a_dense, b)
+        # Deliberate mixed-dtype resolution (not a silent downcast to
+        # b.dtype): both operands meet at the promoted dtype, so e.g. f32
+        # adjacency values × bf16 features compute — and return — f32.
+        compute = resolve_compute_dtype(a_dense.dtype, b.dtype)
+        a_dense, bb = a_dense.astype(compute), b.astype(compute)
+        if base == "dense":
+            return ref.batched_gemm_ref(a_dense, bb)
         plan = batching.plan_batched_gemm(
-            batch=batch, m=m_pad, n=n_b, k=m_pad, itemsize=b.dtype.itemsize
+            batch=batch, m=m_pad, n=n_b, k=m_pad, itemsize=bb.dtype.itemsize
         )
-        return batched_gemm(a_dense.astype(b.dtype), b, plan=plan,
-                            interpret=interpret)
-    if impl in ("csr", "pallas_csr"):
-        return _csr_forward(coo_to_csr(a, m_pad), b, impl=impl,
-                            interpret=interpret)
-    if impl in ("pallas_ell", "ell"):
+        return batched_gemm(a_dense, bb, plan=plan, interpret=interpret)
+    if base in ("csr", "pallas_csr"):
+        return _csr_forward(coo_to_csr(a, m_pad), b, impl=base,
+                            interpret=interpret, scale=scale, narrow=narrow)
+    if base in ("pallas_ell", "ell"):
         if k_pad is None:
             raise ValueError(f"{impl} requires k_pad (max nnz/row)")
         # Silent-drop guard: coo_to_ell zeroes any nnz beyond k_pad in a row.
@@ -137,25 +203,48 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
         validate_ell_k_pad(a, m_pad, k_pad)
     plan = batching.plan_batched_spmm(
         batch=batch, m_pad=m_pad, n_b=n_b,
-        slots=k_pad if impl == "pallas_ell" else row_ids.shape[1],
+        slots=k_pad if base == "pallas_ell" else row_ids.shape[1],
         itemsize=b.dtype.itemsize,
     )
     if plan.case == 3:
         # Paper case 3: matrices too large for the batched shared-memory
         # strategy — take the per-sample path.
-        return ref.batched_spmm_coo_ref(a, b, m_pad)
-    if impl in ("pallas_ell", "ell"):
+        return dequant(ref.batched_spmm_coo_ref(a, b, m_pad))
+    if base in ("pallas_ell", "ell"):
         ell = coo_to_ell(a, m_pad, k_pad)
-        if impl == "ell":
+        if base == "ell":
             # pure-XLA batched row-split (gather + contraction): the batched
             # single-op semantics without the Pallas kernel
-            return ref.batched_spmm_ell_ref(ell, b)
-        return batched_spmm_ell(ell.col_ids, ell.values, b, plan=plan,
-                                interpret=interpret)
-    if impl == "pallas_coo":
-        return batched_spmm_coo(row_ids, col_ids, values, b, plan=plan,
+            return dequant(ref.batched_spmm_ell_ref(ell, b))
+        cids = narrow_col_ids(ell.col_ids, m_pad) if narrow else ell.col_ids
+        return batched_spmm_ell(cids, ell.values, b, plan=plan,
+                                scale=scale, interpret=interpret)
+    if base == "pallas_coo":
+        rids, cids = row_ids, col_ids
+        if narrow:
+            rids = narrow_col_ids(rids, m_pad)
+            cids = narrow_col_ids(cids, m_pad)
+        return batched_spmm_coo(rids, cids, values, b, plan=plan,
                                 interpret=interpret)
     raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+
+
+_VARIANT_BWD = {
+    # bf16 forwards keep a bf16-class backward (grads accumulate f32
+    # in-kernel, cast on the way out); ELL-class forwards fall to the COO
+    # class like their f32 bases. i8 forwards take a FULL-PRECISION
+    # straight-through backward: the VJP residuals hold the original f32
+    # values (quantization happens inside _forward), so dB is computed
+    # against the unquantized operator — the class mapping of the f32 base.
+    "ell_bf16": "ref",
+    "csr_bf16": "csr_bf16",
+    "pallas_ell_bf16": "pallas_coo_bf16",
+    "pallas_csr_bf16": "pallas_csr_bf16",
+    "pallas_coo_bf16": "pallas_coo_bf16",
+    "pallas_ell_i8": "pallas_coo",
+    "pallas_csr_i8": "pallas_csr",
+    "fused_bf16": "pallas_coo_bf16",
+}
 
 
 def bwd_impl_for(impl: str) -> str:
@@ -165,8 +254,11 @@ def bwd_impl_for(impl: str) -> str:
     COO/scatter class; CSR-class forwards stay CSR — ``csr_transpose`` is an
     exact device-side Aᵀ with no per-row bound to lose. Shared by the local
     and the mesh-sharded VJP. The fused megakernel's dU = Aᵀ·dZ is itself a
-    plain batched SpMM, so it takes the same COO-class backward.
+    plain batched SpMM, so it takes the same COO-class backward. Precision
+    variants map first (before the pallas catch-all) via ``_VARIANT_BWD``.
     """
+    if impl in _VARIANT_BWD:
+        return _VARIANT_BWD[impl]
     if impl in ("csr", "pallas_csr"):
         return impl
     if impl.startswith("pallas") or impl == "fused":
@@ -209,6 +301,7 @@ def batched_spmm(
     interpret: bool | None = None,
     mesh=None,
     mesh_axis: str = "data",
+    precision: str = "f32",
 ) -> jax.Array:
     """C[s] = A[s] @ B[s] for every sample s in the batch, one device op.
 
@@ -217,15 +310,20 @@ def batched_spmm(
     resolves to a concrete implementation from the call's static shapes via
     ``repro.autotune`` before any tracing-dependent work happens.
 
+    ``precision`` is the dtype policy for ``impl="auto"``: ``"bf16"``/
+    ``"i8"`` let the ranking pick a reduced-precision variant (DESIGN.md
+    §10). A concrete ``impl`` already encodes its policy (``"csr_bf16"``
+    runs bf16 regardless of ``precision``).
+
     ``mesh=`` routes the call through the mesh-sharded path
     (:func:`repro.distributed.spmm.sharded_batched_spmm`): the batch axis is
     split over ``mesh_axis`` and the per-shard kernels run under shard_map,
     with ``impl="auto"`` resolved against the per-shard workload.
     """
-    if impl == "fused":
+    if precision_of(impl)[0] == "fused":
         raise ValueError(
-            "impl='fused' is the graph-conv LAYER megakernel (it needs W and "
-            "bias, not a bare dense operand) — call "
+            f"impl={impl!r} is the graph-conv LAYER megakernel (it needs W "
+            "and bias, not a bare dense operand) — call "
             "repro.core.graph_conv.graph_conv_batched(impl='fused') or "
             "repro.kernels.fused_graph_conv.fused_graph_conv directly")
     interpret = resolve_interpret(interpret)
@@ -234,10 +332,10 @@ def batched_spmm(
 
         return sharded_batched_spmm(a, b, mesh=mesh, axis=mesh_axis,
                                     impl=impl, k_pad=k_pad,
-                                    interpret=interpret)
+                                    interpret=interpret, precision=precision)
     if impl == "auto":
         impl = resolve_impl(a, b, impl="auto", k_pad=k_pad,
-                            interpret=interpret).impl
+                            interpret=interpret, precision=precision).impl
 
     row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
 

@@ -28,11 +28,15 @@ def spmm_coo_single(
     m_out: int,
 ) -> jax.Array:
     """C[rid] += val * B[cid] — SparseTensorDenseMatMul semantics. Padded
-    entries (value 0.0) are harmless."""
-    gathered = values[:, None].astype(b.dtype) * b[col_ids]
-    return (
-        jnp.zeros((m_out, b.shape[-1]), b.dtype).at[row_ids].add(gathered)
+    entries (value 0.0) are harmless. Accumulates in f32 regardless of the
+    storage dtype (DESIGN.md §10) and casts to ``b.dtype`` on the way out,
+    matching the Pallas kernels' f32 VMEM accumulators."""
+    gathered = values[:, None].astype(jnp.float32) * b[col_ids].astype(
+        jnp.float32
     )
+    return (
+        jnp.zeros((m_out, b.shape[-1]), jnp.float32).at[row_ids].add(gathered)
+    ).astype(b.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -54,7 +58,9 @@ def batched_spmm_ell_ref(a: BatchedELL, b: jax.Array) -> jax.Array:
 
     def one(cid, val, bb):
         rows = bb[cid]                      # (m_pad, k, n_b) gather
-        return jnp.einsum("mk,mkn->mn", val.astype(bb.dtype), rows)
+        return jnp.einsum(
+            "mk,mkn->mn", val, rows, preferred_element_type=jnp.float32
+        ).astype(bb.dtype)
 
     return jax.vmap(one)(a.col_ids, a.values, b)
 
@@ -70,8 +76,14 @@ def batched_spmm_csr_ref(a: BatchedCSR, b: jax.Array) -> jax.Array:
         rid = jnp.searchsorted(rpt, slot, side="right") - 1
         rid = jnp.clip(rid, 0, m_pad - 1)
         valid = slot < rpt[-1]
-        contrib = jnp.where(valid[:, None], val[:, None].astype(bb.dtype) * bb[cid], 0)
-        return jnp.zeros((m_pad, bb.shape[-1]), bb.dtype).at[rid].add(contrib)
+        contrib = jnp.where(
+            valid[:, None],
+            val[:, None].astype(jnp.float32) * bb[cid].astype(jnp.float32),
+            0.0,
+        )
+        return jnp.zeros((m_pad, bb.shape[-1]), jnp.float32).at[rid].add(
+            contrib
+        ).astype(bb.dtype)
 
     return jax.vmap(one)(a.rpt, a.col_ids, a.values, b)
 

@@ -178,7 +178,13 @@ class GraphServeEngine:
     """
 
     def __init__(self, params, cfg: GCNConfig, *, batch: int = 32,
-                 m_pad: int = 56, nnz_pad: int = 256, mesh=None):
+                 m_pad: int = 56, nnz_pad: int = 256, mesh=None,
+                 precision: str | None = None):
+        if precision is not None:
+            # Serving's dtype-policy override (DESIGN.md §10): training keeps
+            # the config's f32, an engine may opt its waves into bf16 without
+            # touching the shared GCNConfig.
+            cfg = dataclasses.replace(cfg, precision=precision)
         self.params, self.cfg = params, cfg
         self.batch, self.m_pad, self.nnz_pad = batch, m_pad, nnz_pad
         self.mesh = mesh
@@ -200,8 +206,13 @@ class GraphServeEngine:
 
             impls = {d.impl for d in resolve_conv_impls(
                 cfg, batch, m_pad, nnz_pad, mesh=mesh)}
-        self._ell_degree_guard = (cfg.k_pad is not None
-                                  and bool(impls & {"ell", "pallas_ell"}))
+        from repro.autotune import precision_of
+
+        self._ell_degree_guard = (
+            self.cfg.k_pad is not None
+            and any(i != "auto"
+                    and precision_of(i)[0] in ("ell", "pallas_ell")
+                    for i in impls))
 
     @staticmethod
     def _rebuild(adj_arrays):
@@ -225,7 +236,7 @@ class GraphServeEngine:
         return resolve_graph_conv_impl(
             adj, x, self.cfg.conv_widths[0], impl=self.cfg.impl,
             k_pad=self.cfg.k_pad, interpret=self.cfg.interpret,
-            mesh=self.mesh)
+            mesh=self.mesh, precision=self.cfg.precision)
 
     def _validate(self, s: int, r: GraphRequest) -> str | None:
         """Reason this request cannot ride this engine's wave geometry, or

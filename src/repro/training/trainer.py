@@ -174,7 +174,8 @@ class GCNTrainer:
         return resolve_graph_conv_impl(
             batch["adj"], batch["x"], self.cfg.conv_widths[0],
             impl=self.cfg.impl, k_pad=self.cfg.k_pad,
-            interpret=self.cfg.interpret, mesh=self.mesh)
+            interpret=self.cfg.interpret, mesh=self.mesh,
+            precision=self.cfg.precision)
 
     def _replicate(self, tree):
         if self.mesh is None:
@@ -245,7 +246,13 @@ class GCNTrainer:
         # and memoized; the DATA check (a bincount per sample) runs on
         # every batch — it is data-dependent, so no object/shape memo can
         # soundly skip it, and it is trivial next to a training step.
-        ell_candidates = ("ell", "pallas_ell")
+        # Class membership via precision_of so reduced-precision ELL
+        # variants (ell_bf16, pallas_ell_i8, …) trip the guard too.
+        from repro.autotune import precision_of
+        from repro.core.spmm import IMPLS
+
+        ell_candidates = tuple(
+            i for i in IMPLS if precision_of(i)[0] in ("ell", "pallas_ell"))
         maybe_ell = (self.cfg.k_pad is not None
                      and self.cfg.impl in ("auto",) + ell_candidates)
         ell_by_shape: dict[tuple, bool] = {}

@@ -1,0 +1,186 @@
+"""Shared tolerance-aware oracle harness (DESIGN.md §10).
+
+One parametrized matrix covers EVERY concrete impl in the registry —
+full-precision and reduced-precision variants alike — against the
+``impl="ref"`` f32 oracle, forward AND both grads, on the three acceptance
+regimes (uniform, skewed, zero-nnz). The per-policy tolerance table encodes
+the accumulation contract: every kernel accumulates in f32, so the error
+budget is the *storage* rounding of the policy (bf16 mantissa, i8
+quantization step), not a compounding accumulation error.
+
+Not ``test_``-prefixed on purpose: this is a library the test modules
+(test_kernels.py, test_fused_graph_conv.py) parametrize over, importable
+because pytest puts ``tests/`` on sys.path via conftest.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune import precision_of
+from repro.core import coo_from_lists, max_row_degree, random_batch
+from repro.core.graph_conv import graph_conv_batched, init_graph_conv
+from repro.core.spmm import IMPLS, batched_spmm
+
+CASES = ("uniform", "skewed", "zero_nnz")
+
+# storage policy → (atol, rtol) against the f32 ref oracle. f32 impls are
+# bit-compatible reorderings of the same f32 math (tiny atol covers the
+# reduction-order slack); bf16 pays one 8-bit-mantissa rounding per stored
+# value/feature; i8 pays half a quantization step (maxabs/254) per value,
+# amplified by the row degree of the test batches.
+TOLS = {
+    "f32": (1e-4, 1e-5),
+    "bf16": (8e-2, 2e-2),
+    "i8": (0.25, 2e-2),
+}
+
+# Every concrete SpMM-shaped impl: not the resolver ("auto"), not the
+# layer-op class ("fused"/"fused_bf16" — exercised by layer_cases below).
+CONCRETE_SPMM_IMPLS = tuple(
+    i for i in IMPLS if i != "auto" and precision_of(i)[0] != "fused")
+
+LAYER_IMPLS = tuple(i for i in IMPLS if precision_of(i)[0] == "fused")
+
+
+def spmm_cases():
+    """(name, coo, m_pad, b, k_pad) for the three acceptance regimes.
+
+    Values are drawn from N(0, 1) — NOT the unit adjacency values of the
+    dataset generator — so the i8 quantizer has a real dynamic range to
+    compress (unit values would make quantization exact and the i8 leg of
+    the matrix vacuous).
+    """
+    rng = np.random.default_rng(11)
+    cases = []
+    # uniform: every row the same degree
+    coo, m_pad = random_batch(rng, batch=4, dim=24, nnz_per_row=3)
+    coo = dataclasses.replace(
+        coo, values=jnp.asarray(
+            np.where(np.asarray(coo.values) != 0.0,
+                     rng.normal(size=coo.values.shape), 0.0), jnp.float32))
+    cases.append(("uniform", coo, m_pad))
+    # skewed: one heavy sample among light ones, plus an all-zero sample
+    heavy_r = np.repeat(np.arange(4, dtype=np.int32), 8)        # degree 8
+    heavy_c = np.asarray(rng.integers(0, 24, heavy_r.size), np.int32)
+    light_r = np.asarray([0, 5], np.int32)
+    light_c = np.asarray([1, 2], np.int32)
+    empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
+             np.zeros(0, np.float32))
+    coo = coo_from_lists(
+        [(heavy_r, heavy_c,
+          rng.normal(size=heavy_r.size).astype(np.float32)),
+         (light_r, light_c, rng.normal(size=2).astype(np.float32)), empty],
+        [24, 24, 24])
+    cases.append(("skewed", coo, 24))
+    # zero-nnz: every sample empty (padding-wave shape)
+    coo = coo_from_lists([empty, empty], [16, 16])
+    cases.append(("zero_nnz", coo, 16))
+    out = []
+    for name, coo, m_pad in cases:
+        b = jnp.asarray(
+            np.random.default_rng(12).normal(size=(coo.batch, m_pad, 48)),
+            jnp.float32)
+        k_pad = max(1, int(np.asarray(max_row_degree(coo, m_pad)).max()))
+        out.append((name, coo, m_pad, b, k_pad))
+    return out
+
+
+def tols_for(impl: str) -> tuple[float, float]:
+    return TOLS[precision_of(impl)[1]]
+
+
+def check_spmm_forward(impl: str) -> None:
+    """Forward sweep: ``impl`` vs the f32 ref oracle on every case, at the
+    impl's policy tolerance. The output dtype contract is also asserted:
+    every impl returns in B's dtype regardless of internal storage."""
+    atol, rtol = tols_for(impl)
+    for name, coo, m_pad, b, k_pad in spmm_cases():
+        want = np.asarray(batched_spmm(coo, b, impl="ref"))
+        got_j = batched_spmm(coo, b, impl=impl, k_pad=k_pad)
+        assert got_j.dtype == b.dtype, f"{impl} output dtype on {name}"
+        np.testing.assert_allclose(np.asarray(got_j), want, atol=atol,
+                                   rtol=rtol, err_msg=f"{impl} on {name}")
+
+
+def check_spmm_grads(impl: str) -> None:
+    """Both grads (d/dvalues, d/dB) of a tanh-sum loss vs the ref oracle.
+    Reduced-precision variants accumulate their backward in f32 too, so the
+    same per-policy tolerance applies."""
+    atol, rtol = tols_for(impl)
+    for name, coo, m_pad, b, k_pad in spmm_cases():
+        def loss(values, bb, impl=impl, coo=coo, k_pad=k_pad):
+            c = batched_spmm(dataclasses.replace(coo, values=values), bb,
+                             impl=impl, k_pad=k_pad)
+            return jnp.sum(jnp.tanh(c))
+
+        def loss_ref(values, bb, coo=coo):
+            c = batched_spmm(dataclasses.replace(coo, values=values), bb,
+                             impl="ref")
+            return jnp.sum(jnp.tanh(c))
+
+        g = jax.grad(loss, argnums=(0, 1))(coo.values, b)
+        g_ref = jax.grad(loss_ref, argnums=(0, 1))(coo.values, b)
+        np.testing.assert_allclose(
+            np.asarray(g[0]), np.asarray(g_ref[0]), atol=atol, rtol=rtol,
+            err_msg=f"{impl} dvalues on {name}")
+        np.testing.assert_allclose(
+            np.asarray(g[1]), np.asarray(g_ref[1]), atol=atol, rtol=rtol,
+            err_msg=f"{impl} db on {name}")
+
+
+# ---------------------------------------------------------------------------
+# Layer-class impls (the fused megakernel and its variants): the same three
+# regimes expressed as graph-conv layer inputs.
+# ---------------------------------------------------------------------------
+
+def layer_cases(channels: int = 2, n_in: int = 12, n_out: int = 24):
+    """(name, params, adj, x) per acceptance regime for the fused class."""
+    out = []
+    for name, coo, m_pad, _, _ in spmm_cases():
+        rng = np.random.default_rng(13)
+        adj = [coo]
+        for ch in range(1, channels):
+            perm = rng.permutation(coo.values.shape[1])
+            adj.append(dataclasses.replace(
+                coo, values=coo.values[:, perm], row_ids=coo.row_ids[:, perm],
+                col_ids=coo.col_ids[:, perm]))
+        x = jnp.asarray(rng.normal(size=(coo.batch, m_pad, n_in)),
+                        jnp.float32)
+        params = init_graph_conv(jax.random.key(13), n_in, n_out, channels)
+        out.append((name, params, adj, x))
+    return out
+
+
+def check_layer_forward(impl: str) -> None:
+    atol, rtol = tols_for(impl)
+    for name, params, adj, x in layer_cases():
+        want = np.asarray(graph_conv_batched(params, adj, x, impl="ref"))
+        got_j = graph_conv_batched(params, adj, x, impl=impl)
+        assert got_j.dtype == x.dtype, f"{impl} output dtype on {name}"
+        np.testing.assert_allclose(np.asarray(got_j), want, atol=atol,
+                                   rtol=rtol, err_msg=f"{impl} on {name}")
+
+
+def check_layer_grads(impl: str) -> None:
+    # dW/dX contract over the whole (batch · m_pad) extent, so the storage
+    # rounding of a reduced policy is amplified by the reduction width —
+    # unlike the per-element SpMM grads. 3x the per-policy budget covers the
+    # sqrt(batch·m_pad) growth of the test geometries.
+    atol, rtol = (t * 3 for t in tols_for(impl))
+    for name, params, adj, x in layer_cases():
+        def loss(vals_list, xx, ww, bb, impl=impl, adj=adj):
+            aa = [a.with_values(v) for a, v in zip(adj, vals_list)]
+            y = graph_conv_batched({"w": ww, "b": bb}, aa, xx, impl=impl)
+            return jnp.sum(jnp.tanh(y))
+
+        args = ([a.values for a in adj], x, params["w"], params["b"])
+        g = jax.grad(loss, argnums=(0, 1, 2, 3))(*args)
+        g_ref = jax.grad(
+            lambda *a: loss(*a, impl="ref"), argnums=(0, 1, 2, 3))(*args)
+        for leaf, (gg, gr) in enumerate(zip(jax.tree.leaves(g),
+                                            jax.tree.leaves(g_ref))):
+            np.testing.assert_allclose(
+                np.asarray(gg), np.asarray(gr), atol=atol, rtol=rtol,
+                err_msg=f"{impl} grad leaf {leaf} on {name}")

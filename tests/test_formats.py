@@ -19,12 +19,14 @@ except ModuleNotFoundError:
 import pytest
 
 from repro.core import (
+    INT16_MAX,
     coo_from_lists,
     coo_to_csr,
     coo_to_dense,
     coo_to_ell,
     csr_transpose,
     max_row_degree,
+    narrow_col_ids,
     random_batch,
     validate_ell_k_pad,
 )
@@ -124,6 +126,90 @@ def test_ell_matches_dense():
 
 
 # ---------------------------------------------------------------------------
+# Deterministic checkers behind the property tests (ISSUE 6 satellite).
+# Plain functions so the invariant logic runs in tier-1 even without
+# hypothesis; the @given wrappers below fuzz them when it is installed.
+# ---------------------------------------------------------------------------
+
+def _check_format_roundtrip_preserves_values(coo, m_pad):
+    """coo↔ell↔csr: every conversion carries the SAME value multiset per
+    sample — the product is identical because the values are, not merely
+    close."""
+    deg = int(np.asarray(max_row_degree(coo, m_pad)).max())
+    k_pad = max(1, deg)
+    ell = coo_to_ell(coo, m_pad, k_pad)
+    csr = coo_to_csr(coo, m_pad)
+    for s in range(coo.batch):
+        def nz(x):
+            flat = np.asarray(x).ravel()
+            return np.sort(flat[flat != 0.0])
+
+        want = nz(coo.values[s])
+        np.testing.assert_array_equal(nz(ell.values[s]), want)
+        np.testing.assert_array_equal(nz(csr.values[s]), want)
+
+
+def _check_csr_transpose_involution(coo, m_pad):
+    """csr_transpose(csr_transpose(A)) == A, compared as dense matrices
+    (the row ordering inside a CSR row may legally permute)."""
+    csr = coo_to_csr(coo, m_pad)
+    back = csr_transpose(csr_transpose(csr, m_pad), m_pad)
+    eye = jnp.eye(m_pad, dtype=jnp.float32)[None].repeat(coo.batch, axis=0)
+    d0 = np.asarray(ref.batched_spmm_csr_ref(csr, eye))
+    d1 = np.asarray(ref.batched_spmm_csr_ref(back, eye))
+    np.testing.assert_allclose(d1, d0, atol=1e-6)
+
+
+def _check_ell_guard_agrees_with_conversion(coo, m_pad, k_pad):
+    """validate_ell_k_pad passes ⟺ coo_to_ell at that k_pad drops nothing:
+    the guard must never admit a batch the conversion would silently
+    truncate (and never reject a lossless one)."""
+    total = float(np.asarray(coo.values).sum())
+    try:
+        validate_ell_k_pad(coo, m_pad, k_pad)
+        admitted = True
+    except ValueError:
+        admitted = False
+    ell_total = float(np.asarray(coo_to_ell(coo, m_pad, k_pad).values).sum())
+    lossless = ell_total == total
+    assert admitted == lossless, (
+        f"guard admitted={admitted} but conversion lossless={lossless} "
+        f"(k_pad={k_pad}, sum {ell_total} vs {total})")
+
+
+def test_format_roundtrip_preserves_values_deterministic():
+    coo, m_pad = _random_coo(3, 4, (5, 24), (1, 4))
+    _check_format_roundtrip_preserves_values(coo, m_pad)
+
+
+def test_csr_transpose_involution_deterministic():
+    coo, m_pad = _random_coo(4, 3, (5, 20), (1, 4))
+    _check_csr_transpose_involution(coo, m_pad)
+
+
+def test_ell_guard_agrees_with_conversion_deterministic():
+    r = np.asarray([0, 0, 0, 1], np.int32)
+    c = np.asarray([1, 2, 3, 0], np.int32)
+    coo = coo_from_lists([(r, c, np.ones(4, np.float32))], [8])
+    for k_pad in (1, 2, 3, 4):
+        _check_ell_guard_agrees_with_conversion(coo, 8, k_pad)
+
+
+def test_int16_narrowing_boundary():
+    """int16 column-index storage (DESIGN.md §10): indices at m_pad-1
+    survive the narrowing exactly up to the int16 ceiling (m_pad=32767 is
+    also the COO pad sentinel, so it must fit); one past it raises
+    host-side instead of wrapping negative on device."""
+    ids = jnp.asarray([[0, INT16_MAX - 1, INT16_MAX]], jnp.int32)
+    narrow = narrow_col_ids(ids, INT16_MAX)
+    assert narrow.dtype == jnp.int16
+    np.testing.assert_array_equal(np.asarray(narrow, np.int64),
+                                  np.asarray(ids, np.int64))
+    with pytest.raises(ValueError, match="int16"):
+        narrow_col_ids(ids, INT16_MAX + 1)
+
+
+# ---------------------------------------------------------------------------
 # Property tests (hypothesis) — decorators need hypothesis at definition
 # time, so the whole block is conditional on the optional dep.
 # ---------------------------------------------------------------------------
@@ -178,6 +264,49 @@ if HAS_HYPOTHESIS:
         got = batched_spmm(coo2, b, impl="ref")
         want = batched_spmm(coo, b, impl="ref")
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(coo_batches())
+    def test_property_format_roundtrip_preserves_values(case):
+        """∀ batches: coo↔ell↔csr conversions preserve the per-sample
+        value multiset exactly (ISSUE 6 satellite)."""
+        coo, m_pad, _ = case
+        _check_format_roundtrip_preserves_values(coo, m_pad)
+
+    @settings(max_examples=15, deadline=None)
+    @given(coo_batches())
+    def test_property_csr_transpose_involution(case):
+        """∀ batches: csr_transpose(csr_transpose(A)) == A."""
+        coo, m_pad, _ = case
+        _check_csr_transpose_involution(coo, m_pad)
+
+    @settings(max_examples=15, deadline=None)
+    @given(coo_batches(), st.integers(1, 8))
+    def test_property_ell_guard_never_passes_lossy_batch(case, k_pad):
+        """∀ batches, k_pad: validate_ell_k_pad admits exactly the batches
+        coo_to_ell(k_pad) converts losslessly — the guard can never let a
+        silently-truncating conversion through."""
+        coo, m_pad, _ = case
+        _check_ell_guard_agrees_with_conversion(coo, m_pad, k_pad)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, INT16_MAX + 1), st.data())
+    def test_property_int16_narrowing_boundary(m_pad, data):
+        """∀ m_pad ≤ INT16_MAX: narrowing is exact for ids in [0, m_pad)
+        and at the pad sentinel m_pad itself; m_pad > INT16_MAX raises
+        host-side (never wraps negative on device)."""
+        ids_list = data.draw(st.lists(
+            st.integers(0, m_pad), min_size=1, max_size=8))
+        ids_list.append(m_pad - 1)          # always hit the boundary id
+        ids = jnp.asarray([ids_list], jnp.int32)
+        if m_pad > INT16_MAX:
+            with pytest.raises(ValueError, match="int16"):
+                narrow_col_ids(ids, m_pad)
+            return
+        narrow = narrow_col_ids(ids, m_pad)
+        assert narrow.dtype == jnp.int16
+        np.testing.assert_array_equal(np.asarray(narrow, np.int64),
+                                      np.asarray(ids, np.int64))
 
     @settings(max_examples=10, deadline=None)
     @given(coo_batches())

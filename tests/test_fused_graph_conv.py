@@ -149,6 +149,41 @@ def test_fused_epilogue_and_residual():
 
 
 # ---------------------------------------------------------------------------
+# Shared oracle harness (tests/oracle.py, ISSUE 6): the fused layer class —
+# f32 megakernel AND its bf16 variant — over the same uniform/skewed/zero-nnz
+# matrix as every SpMM impl, at per-policy tolerance.
+# ---------------------------------------------------------------------------
+
+from oracle import LAYER_IMPLS, check_layer_forward, check_layer_grads  # noqa: E402
+
+
+@pytest.mark.parametrize("impl", LAYER_IMPLS)
+def test_layer_matrix_forward_matches_ref(impl):
+    check_layer_forward(impl)
+
+
+@pytest.mark.parametrize("impl", LAYER_IMPLS)
+def test_layer_matrix_grads_match_ref(impl):
+    check_layer_grads(impl)
+
+
+def test_fused_bf16_registered_and_ranked():
+    """fused_bf16 is a first-class layer candidate: admitted by rank_layer
+    under a reduced dtype policy, absent at f32, and resolvable end-to-end
+    through graph_conv_batched(impl='auto', precision='bf16')."""
+    from repro.autotune import KINDS, Workload, rank_layer
+
+    assert KINDS["fused_bf16"] == KINDS["fused"] == "fused"
+    w = Workload(batch=100, m_pad=56, nnz_pad=512, k_pad=8, n_b=64,
+                 channels=4, n_in=62, nnz_avg=128, dtype="bf16")
+    cands = [i for i, _ in rank_layer(w, allow_pallas=True)]
+    assert "fused_bf16" in cands
+    wf = dataclasses.replace(w, dtype="f32")
+    assert "fused_bf16" not in [i for i, _ in rank_layer(wf,
+                                                         allow_pallas=True)]
+
+
+# ---------------------------------------------------------------------------
 # Skew-aware packing plan
 # ---------------------------------------------------------------------------
 

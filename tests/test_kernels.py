@@ -7,11 +7,9 @@ import pytest
 
 from repro.core import (
     batching,
-    coo_from_lists,
     coo_to_csr,
     coo_to_dense,
     coo_to_ell,
-    max_row_degree,
     random_batch,
 )
 from repro.core.spmm import IMPLS, batched_spmm
@@ -152,86 +150,62 @@ def test_vjp_matches_ref():
 
 
 # ---------------------------------------------------------------------------
-# The impl matrix (ISSUE 5 satellite): EVERY registered concrete impl must
-# match the ref oracle — forward AND grads — on uniform, skewed and zero-nnz
-# batches. "auto" resolves to one of these; "fused" is a layer op with its
-# own suite (test_fused_graph_conv.py).
+# The impl matrix (ISSUE 5 satellite, generalized by ISSUE 6): EVERY
+# registered concrete impl — full-precision AND reduced-precision variants —
+# must match the ref oracle, forward and grads, on uniform, skewed and
+# zero-nnz batches at its policy's tolerance. The shared harness lives in
+# tests/oracle.py; "auto" resolves to one of these; the fused layer class
+# runs through the same harness in test_fused_graph_conv.py.
 # ---------------------------------------------------------------------------
 
-CONCRETE_IMPLS = tuple(i for i in IMPLS if i not in ("auto", "fused"))
+from oracle import (  # noqa: E402
+    CONCRETE_SPMM_IMPLS,
+    check_spmm_forward,
+    check_spmm_grads,
+)
 
 
-def _matrix_cases():
-    """(name, coo, m_pad, b, k_pad) for the three acceptance regimes."""
-    rng = np.random.default_rng(11)
-    cases = []
-    # uniform: every row the same degree
-    coo, m_pad = random_batch(rng, batch=4, dim=24, nnz_per_row=3)
-    cases.append(("uniform", coo, m_pad))
-    # skewed: one heavy sample among light ones, plus an all-zero sample
-    heavy_r = np.repeat(np.arange(4, dtype=np.int32), 8)        # degree 8
-    heavy_c = np.asarray(rng.integers(0, 24, heavy_r.size), np.int32)
-    light_r = np.asarray([0, 5], np.int32)
-    light_c = np.asarray([1, 2], np.int32)
-    empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
-             np.zeros(0, np.float32))
-    coo = coo_from_lists(
-        [(heavy_r, heavy_c, np.ones(heavy_r.size, np.float32)),
-         (light_r, light_c, np.ones(2, np.float32)), empty],
-        [24, 24, 24])
-    cases.append(("skewed", coo, 24))
-    # zero-nnz: every sample empty (padding-wave shape)
-    coo = coo_from_lists([empty, empty], [16, 16])
-    cases.append(("zero_nnz", coo, 16))
-    out = []
-    for name, coo, m_pad in cases:
-        b = jnp.asarray(
-            np.random.default_rng(12).normal(size=(coo.batch, m_pad, 48)),
-            jnp.float32)
-        k_pad = max(1, int(np.asarray(max_row_degree(coo, m_pad)).max()))
-        out.append((name, coo, m_pad, b, k_pad))
-    return out
-
-
-@pytest.mark.parametrize("impl", CONCRETE_IMPLS)
+@pytest.mark.parametrize("impl", CONCRETE_SPMM_IMPLS)
 def test_impl_matrix_forward_matches_ref(impl):
-    for name, coo, m_pad, b, k_pad in _matrix_cases():
-        want = np.asarray(batched_spmm(coo, b, impl="ref"))
-        got = np.asarray(batched_spmm(coo, b, impl=impl, k_pad=k_pad))
-        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5,
-                                   err_msg=f"{impl} on {name}")
+    check_spmm_forward(impl)
 
 
-@pytest.mark.parametrize("impl", CONCRETE_IMPLS)
+@pytest.mark.parametrize("impl", CONCRETE_SPMM_IMPLS)
 def test_impl_matrix_grads_match_ref(impl):
+    check_spmm_grads(impl)
+
+
+@pytest.mark.parametrize("impl", ["dense", "pallas_gemm"])
+def test_dense_fallback_promotes_mixed_dtypes(impl):
+    """Regression (ISSUE 6 satellite): the dense fallback used to
+    ``a_dense.astype(b.dtype)`` — a SILENT downcast that rounded f32
+    adjacency values to bf16 whenever B arrived in bf16, and returned the
+    product at bf16. Mixed dtypes must resolve through the promotion policy
+    (resolve_compute_dtype): both operands promoted to f32 compute, output
+    at the promoted dtype. Values are chosen so bf16 rounding is visible
+    and B is exactly representable at bf16, so the pre-fix path fails both
+    the dtype and the allclose assertion."""
     import dataclasses
 
-    for name, coo, m_pad, b, k_pad in _matrix_cases():
-        def loss(values, bb, impl=impl, coo=coo, k_pad=k_pad):
-            c = batched_spmm(dataclasses.replace(coo, values=values), bb,
-                             impl=impl, k_pad=k_pad)
-            return jnp.sum(jnp.tanh(c))
-
-        def loss_ref(values, bb, coo=coo):
-            c = batched_spmm(dataclasses.replace(coo, values=values), bb,
-                             impl="ref")
-            return jnp.sum(jnp.tanh(c))
-
-        g = jax.grad(loss, argnums=(0, 1))(coo.values, b)
-        g_ref = jax.grad(loss_ref, argnums=(0, 1))(coo.values, b)
-        np.testing.assert_allclose(
-            np.asarray(g[0]), np.asarray(g_ref[0]), atol=1e-4,
-            err_msg=f"{impl} dvalues on {name}")
-        np.testing.assert_allclose(
-            np.asarray(g[1]), np.asarray(g_ref[1]), atol=1e-4,
-            err_msg=f"{impl} db on {name}")
+    rng = np.random.default_rng(21)
+    coo, m_pad = random_batch(rng, batch=2, dim=12, nnz_per_row=2)
+    vals = np.asarray(coo.values)
+    coo = dataclasses.replace(coo, values=jnp.asarray(
+        np.where(vals != 0, vals + 1e-3, 0.0), jnp.float32))
+    b = jnp.asarray(rng.integers(-4, 5, (2, m_pad, 8)), jnp.bfloat16)
+    out = batched_spmm(coo, b, impl=impl)
+    assert out.dtype == jnp.float32, "mixed f32×bf16 must promote, not demote"
+    want = batched_spmm(coo, b.astype(jnp.float32), impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6,
+                               rtol=1e-6)
 
 
 def test_bwd_impl_mapping_pinned():
     """bwd_impl_for's mapping, pinned for EVERY entry in IMPLS — the
     backward class is part of each impl's contract (CSR keeps CSR via
-    csr_transpose; ELL-class falls back to the scatter classes; a typo'd
-    or future impl falls back to ref)."""
+    csr_transpose; ELL-class falls back to the scatter classes; reduced-
+    precision variants keep a class-consistent backward that accumulates in
+    f32; a typo'd or future impl falls back to ref)."""
     want = {
         "auto": "ref",          # resolved before the VJP; ref if it leaks
         "ref": "ref",
@@ -244,6 +218,17 @@ def test_bwd_impl_mapping_pinned():
         "pallas_gemm": "pallas_coo",
         "loop": "loop",
         "fused": "pallas_coo",  # dU = Aᵀ·dZ is a plain batched SpMM
+        # bf16 variants keep the class (and policy) through the backward
+        "ell_bf16": "ref",
+        "csr_bf16": "csr_bf16",
+        "pallas_ell_bf16": "pallas_coo_bf16",
+        "pallas_csr_bf16": "pallas_csr_bf16",
+        "pallas_coo_bf16": "pallas_coo_bf16",
+        "fused_bf16": "pallas_coo_bf16",
+        # i8 backward is full-precision straight-through: the residuals hold
+        # the ORIGINAL f32 values, so the grads run the f32 base class
+        "pallas_ell_i8": "pallas_coo",
+        "pallas_csr_i8": "pallas_csr",
     }
     assert set(want) == set(IMPLS)
     for impl in IMPLS:

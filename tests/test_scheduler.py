@@ -465,3 +465,119 @@ def test_dataset_stream_to_scheduler_end_to_end():
     assert s["served"] == len(data) and s["rejected"] == 0
     assert s["compile_count"] <= len(policy.tiers)
     assert 0.0 < s["fill_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# RealClock (ISSUE 6 satellite): the wall-time clock through the same event
+# loop, with time.monotonic/time.sleep stubbed so nothing actually sleeps.
+# ---------------------------------------------------------------------------
+
+class _FakeTime:
+    """Deterministic stand-in for the ``time`` module inside scheduler.py:
+    monotonic()/perf_counter() read a controlled counter, sleep() advances
+    it (recording every sleep), so RealClock's real code paths run without
+    wall-clock flakiness."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def monotonic(self):
+        return self.t
+
+    def perf_counter(self):
+        return self.t
+
+    def sleep(self, dt):
+        assert dt >= 0
+        self.sleeps.append(dt)
+        self.t += dt
+
+
+@pytest.fixture()
+def fake_time(monkeypatch):
+    from repro.scheduler import scheduler as sched_mod
+
+    ft = _FakeTime()
+    monkeypatch.setattr(sched_mod, "time", ft)
+    return ft
+
+
+def test_real_clock_serve_drains(small_setup, fake_time):
+    """serve() under the default RealClock drains the whole stream: every
+    request completes, future arrivals are waited for by really sleeping
+    (the stub records the sleeps), and waves dispatch at >= arrival."""
+    spec, data, cfg, params = small_setup
+    policy = TierPolicy.from_requests(
+        [(s.n_nodes, max(len(r) for r in s.rows)) for s in data],
+        levels=2, batch=4)
+    sched = Scheduler(params, cfg, tiers=policy,
+                      service_model=lambda tier, n: 0.0,
+                      config=SchedulerConfig(batch=4, flush_after=0.05))
+    from repro.scheduler.scheduler import RealClock
+
+    assert isinstance(sched.clock, RealClock)      # the default clock
+    reqs = _reqs(data[:8])
+    arrivals = [0.0, 0.0, 0.0, 0.0, 0.5, 0.5, 0.5, 0.5]
+    out = sched.serve(reqs, arrivals=arrivals)
+    assert all(r.done and not r.failed for r in out)
+    assert sched.metrics.served == 8
+    # the second burst arrives in the future: RealClock must actually sleep
+    # to it, not spin or drop it
+    assert fake_time.sleeps and fake_time.t >= 0.5
+    for p in sched.completed:
+        assert p.dispatch >= p.arrival
+
+
+def test_real_clock_deadline_expiry_wall_time(small_setup, fake_time):
+    """Deadline misses under RealClock are measured against WALL time: a
+    wave whose service outlasts the request's deadline records a miss even
+    though the virtual service model never advances this clock."""
+    import dataclasses as dc
+
+    spec, data, cfg, params = small_setup
+    policy = TierPolicy(m_pads=(56,), nnz_pads=(128,), batch=4)
+
+    class _SlowEngine(GraphServeEngine):
+        def run_wave(self, wave):
+            fake_time.t += 1.0              # the wave burns 1s of wall time
+            return super().run_wave(wave)
+
+    cfg_sample = dc.replace(cfg, bn_mode="sample")
+    sched = Scheduler(
+        params, cfg, tiers=policy,
+        config=SchedulerConfig(batch=4, flush_after=0.1),
+        engine_factory=lambda tier: _SlowEngine(
+            params, cfg_sample, batch=tier.batch, m_pad=tier.m_pad,
+            nnz_pad=tier.nnz_pad))
+    reqs = _reqs(data[:2])
+    sched.serve(reqs, deadlines=[0.5, 2.5])        # one busts, one survives
+    assert all(r.done for r in reqs)
+    assert sched.metrics.deadline_misses == 1
+    for p in sched.completed:
+        assert p.finish >= 1.0                      # wall time really moved
+
+
+def test_real_clock_matches_virtual_wave_composition(small_setup, fake_time):
+    """The SAME arrival trace produces the SAME wave composition under
+    RealClock (stubbed wall time) and VirtualClock: the clock abstraction
+    changes how time passes, never which requests ride together."""
+    spec, data, cfg, params = small_setup
+    policy = TierPolicy.from_requests(
+        [(s.n_nodes, max(len(r) for r in s.rows)) for s in data],
+        levels=2, batch=4)
+    arrivals = [0.0, 0.0, 0.1, 0.1, 0.4, 0.4, 0.4, 1.0]
+
+    def run(clock):
+        sched = Scheduler(
+            params, cfg, tiers=policy, clock=clock,
+            service_model=lambda tier, n: 0.0,
+            config=SchedulerConfig(batch=4, flush_after=0.05))
+        sched.serve(_reqs(data[:8]), arrivals=list(arrivals))
+        return [(w.tier_key, w.report.n_requests)
+                for w in sched.metrics.waves]
+
+    real = run(None)                                # None → RealClock
+    fake_time.t = 0.0
+    virtual = run(VirtualClock())
+    assert real == virtual and sum(n for _, n in real) == 8
