@@ -25,9 +25,9 @@ def main(batch=100, dim=50, nnz=2, n_b=128):
                                               k_pad=nnz + 3)), coo)
     t_dense = time_fn(jax.jit(functools.partial(coo_to_dense, m_pad=m_pad)),
                       coo)
-    row("format/spmm_ref", t_spmm * 1e6, "1.00xSpMM")
-    row("format/coo_to_ell", t_ell * 1e6, f"{t_ell / t_spmm:.2f}xSpMM")
-    row("format/coo_to_dense", t_dense * 1e6, f"{t_dense / t_spmm:.2f}xSpMM")
+    row("conversion/spmm_ref", t_spmm * 1e6, "1.00xSpMM")
+    row("conversion/coo_to_ell", t_ell * 1e6, f"{t_ell / t_spmm:.2f}xSpMM")
+    row("conversion/coo_to_dense", t_dense * 1e6, f"{t_dense / t_spmm:.2f}xSpMM")
 
 
 if __name__ == "__main__":

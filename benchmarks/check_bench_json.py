@@ -24,6 +24,13 @@ Two classes of failure, both cheap to hit when a harness regresses silently:
    real measurement (gated at 1.0 on the summary's best), not the
    ≥-1.0-by-construction ``best=`` rows the loose MIN_RATIO floor guards.
 
+4. **g-SpMM gates** (``BENCH_gspmm.json`` only, suite="gspmm"): every
+   ``maxerr=`` row must stay within the f32 ceiling (all g-SpMM impls are
+   full precision), and all 9 ``gspmm/<op>_<reduce>/best`` rows plus the
+   ``gspmm/gat_vector/best`` vector-edge row must be present — the sweep
+   covering the full message-passing matrix is itself part of the ISSUE 7
+   acceptance.
+
 Exit code 1 with one line per problem; silent 0 otherwise.
 
     PYTHONPATH=src python -m benchmarks.check_bench_json [paths...]
@@ -53,6 +60,35 @@ SUMMARY_ROW = "precision/summary/auto"
 SUMMARY_RE = re.compile(
     r"reduced_selected=([01]).*best_speedup=([-+0-9.eE]+)")
 MIN_BEST_SPEEDUP = 1.0
+
+# --- gspmm-suite gates (BENCH_gspmm.json, suite="gspmm") ------------------
+# every g-SpMM impl is f32, so its maxerr= rows are held to the f32 ceiling
+# by the shared maxerr machinery; additionally the sweep must cover the
+# FULL (op × reduce) message-passing matrix — a corner silently dropped
+# from bench_gspmm.py would otherwise read as "covered" downstream.
+GSPMM_CORNERS = tuple(
+    f"gspmm/{op}_{red}/best"
+    for op in ("mul", "add", "copy_lhs")
+    for red in ("sum", "max", "mean")) + ("gspmm/gat_vector/best",)
+
+
+def _check_gspmm_rows(path, rows) -> list[str]:
+    errors: list[str] = []
+    names = {r.get("name") for r in rows}
+    for corner in GSPMM_CORNERS:
+        if corner not in names:
+            errors.append(
+                f"{path.name}: missing required row {corner!r} — the "
+                "(op × reduce) sweep no longer covers the full matrix")
+    for i, r in enumerate(rows):
+        derived = str(r.get("derived", ""))
+        m = MAXERR_RE.search(derived)
+        if m and float(m.group(1)) > MAX_ERR["f32"]:
+            errors.append(
+                f"{path.name}: rows[{i}] ({r.get('name')}) maxerr="
+                f"{float(m.group(1))} > {MAX_ERR['f32']} — g-SpMM impls "
+                "are f32, this is an oracle-parity regression")
+    return errors
 
 
 def _check_precision_rows(path, rows) -> list[str]:
@@ -126,6 +162,8 @@ def check_file(path: pathlib.Path) -> list[str]:
                     f"ratio={ratio} < {MIN_RATIO} — regression guard")
     if doc.get("suite") == "precision":
         errors.extend(_check_precision_rows(path, doc.get("rows", [])))
+    if doc.get("suite") == "gspmm":
+        errors.extend(_check_gspmm_rows(path, doc.get("rows", [])))
     return errors
 
 

@@ -22,7 +22,7 @@ from benchmarks.common import header, results_snapshot, write_bench_json
 
 # suites whose rows are persisted as BENCH_<name>.json at the repo root so
 # the perf trajectory stays machine-readable across PRs
-PERSISTED = {"fused", "serve", "formats"}
+PERSISTED = {"fused", "serve", "formats", "gspmm"}
 # persisted only on full runs: the precision speedup gate (check_bench_json
 # enforces best_speedup >= 1.0 on the summary row) needs paper-scale
 # geometries to amortize the cast overhead — smoke shapes would overwrite
@@ -38,6 +38,7 @@ def _smoke_suites():
         bench_fig10,
         bench_formats,
         bench_fused,
+        bench_gspmm,
         bench_precision,
     )
 
@@ -70,6 +71,7 @@ def _smoke_suites():
         ("auto", decisions),
         ("serve", lambda: bench_serve.graph_sweep(smoke=True)),
         ("precision", lambda: bench_precision.main(smoke=True)),
+        ("gspmm", lambda: bench_gspmm.main(smoke=True)),
     ]
 
 
@@ -86,12 +88,13 @@ def main() -> None:
     else:
         from benchmarks import (
             bench_chemgcn,
+            bench_conversion,
             bench_fig8,
             bench_fig9,
             bench_fig10,
-            bench_format,
             bench_formats,
             bench_fused,
+            bench_gspmm,
             bench_kernel_breakdown,
             bench_moe,
             bench_precision,
@@ -104,12 +107,13 @@ def main() -> None:
             ("fig10", lambda: bench_fig10.main()),
             ("fused", lambda: bench_fused.main()),
             ("table4", lambda: bench_kernel_breakdown.main()),
-            ("format", lambda: bench_format.main()),
+            ("conversion", lambda: bench_conversion.main()),
             ("formats", lambda: bench_formats.main()),
             ("chemgcn", lambda: bench_chemgcn.main(small=not args.full)),
             ("moe", lambda: bench_moe.main()),
             ("serve", lambda: bench_serve.main(persist=False)),
             ("precision", lambda: bench_precision.main()),
+            ("gspmm", lambda: bench_gspmm.main(smoke=not args.full)),
         ]
     failed = []
     for name, fn in suites:

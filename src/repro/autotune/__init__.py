@@ -18,6 +18,7 @@ from repro.autotune.cache import (  # noqa: F401
     measure_workload,
 )
 from repro.autotune.cost_model import (  # noqa: F401
+    GSPMM_IMPLS,
     PRECISION_IMPLS,
     Workload,
     estimate,
@@ -26,6 +27,7 @@ from repro.autotune.cost_model import (  # noqa: F401
     rank,
     rank_layer,
     spmm_plan,
+    supports_gspmm,
 )
 from repro.autotune.selector import (  # noqa: F401
     KINDS,
@@ -38,8 +40,8 @@ from repro.autotune.selector import (  # noqa: F401
 
 __all__ = [
     "ENV_VAR", "TuningCache", "autotune", "default_cache", "measure_workload",
-    "PRECISION_IMPLS", "Workload", "estimate", "estimate_layer",
-    "precision_of", "rank", "rank_layer", "spmm_plan", "KINDS", "Decision",
-    "forced_decision", "resolve_auto", "select_graph_conv_impl",
-    "select_impl",
+    "GSPMM_IMPLS", "PRECISION_IMPLS", "Workload", "estimate",
+    "estimate_layer", "precision_of", "rank", "rank_layer", "spmm_plan",
+    "supports_gspmm", "KINDS", "Decision", "forced_decision", "resolve_auto",
+    "select_graph_conv_impl", "select_impl",
 ]

@@ -77,6 +77,21 @@ def precision_of(impl: str) -> tuple[str, str]:
     return PRECISION_IMPLS.get(impl, (impl, "f32"))
 
 
+# Impls that implement the full g-SpMM matrix (op × reduce × edge-feature
+# width — DESIGN.md §11). The GEMM class (dense/pallas_gemm) IS the
+# (mul, sum) product and cannot express other reduces; the precision
+# variants stay (mul, sum)-only for now, so a g-SpMM workload (reduce !=
+# "sum" or d_e set) restricts the candidate ladder to this set at f32.
+GSPMM_IMPLS = ("ref", "loop", "ell", "pallas_ell", "csr", "pallas_csr",
+               "pallas_coo")
+
+
+def supports_gspmm(impl: str) -> bool:
+    """Whether ``impl`` can run a non-(mul, sum) or vector-edge workload."""
+    base, policy = precision_of(impl)
+    return base in GSPMM_IMPLS and policy == "f32"
+
+
 def _traffic(policy: str, itemsize: int) -> tuple[int, int, int, int]:
     """(value, index, feature, output) bytes-per-element under a storage
     policy. f32 keeps the legacy accounting (4-byte indices, caller
@@ -133,6 +148,13 @@ class Workload:
     per (sample × channel) when host metadata knows it — the fused kernel's
     per-sample chunk loop pays for the MEAN, every other impl pays for the
     padded max.
+
+    A *g-SpMM* workload (DESIGN.md §11) additionally carries ``op``
+    (``"mul"``/``"add"``/``"copy_lhs"``), ``reduce`` (``"sum"``/``"max"``/
+    ``"mean"``) and ``d_e`` (the per-edge feature-vector width, None for
+    scalar edges): the defaults mean "plain SpMM" and keep the key format
+    unchanged; non-defaults restrict the candidate ladder to
+    :data:`GSPMM_IMPLS` and charge the extra value traffic.
     """
 
     batch: int
@@ -145,11 +167,15 @@ class Workload:
     n_in: int | None = None
     nnz_avg: int | None = None
     dtype: str = "f32"      # precision policy: "f32" | "bf16" | "i8"
+    d_e: int | None = None  # edge-feature width (g-SpMM vector edges)
+    reduce: str = "sum"     # g-SpMM reduce kind: "sum" | "max" | "mean"
+    op: str = "mul"         # g-SpMM combine op: "mul" | "add" | "copy_lhs"
 
     def key(self) -> str:
         """Stable string key for the persistent tuning cache (DESIGN.md §5).
-        The dtype suffix appears only for reduced-precision policies so every
-        pre-existing f32 cache entry keeps its key."""
+        The dtype / g-SpMM (op, reduce, edge-feature) suffixes appear only
+        for non-default values so every pre-existing cache entry keeps its
+        key."""
         k = self.k_pad if self.k_pad is not None else 0
         base = (f"b{self.batch}_m{self.m_pad}_nnz{self.nnz_pad}"
                 f"_k{k}_n{self.n_b}_i{self.itemsize}")
@@ -157,7 +183,19 @@ class Workload:
             base += f"_c{self.channels}_nin{self.n_in or 0}"
         if self.dtype != "f32":
             base += f"_d{self.dtype}"
+        if self.d_e is not None:
+            base += f"_e{self.d_e}"
+        if self.reduce != "sum":
+            base += f"_r{self.reduce}"
+        if self.op != "mul":
+            base += f"_o{self.op}"
         return base
+
+    @property
+    def is_gspmm(self) -> bool:
+        """True when this workload needs a g-SpMM-capable impl."""
+        return (self.op != "mul" or self.reduce != "sum"
+                or self.d_e is not None)
 
     def shard(self, n_shards: int) -> "Workload":
         """The per-shard view of this workload on an ``n_shards``-way mesh:
@@ -208,12 +246,19 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
     vpu_peak = hw.peak_flops / 16.0           # vector (non-MXU) arithmetic
     out_bytes = w.batch * w.m_pad * w.n_b * ob
     b_bytes = w.batch * w.m_pad * w.n_b * fb
+    # g-SpMM extras (DESIGN.md §11), zero for plain SpMM so every legacy
+    # estimate is unchanged: vector edges read (d_e - 1) extra value
+    # elements per slot; a max/mean reduce pays one post-kernel fix-up pass
+    # over the output (degree rewrite / scale).
+    d_x = (w.d_e - 1) if w.d_e else 0
+    gfix = out_bytes if w.reduce != "sum" else 0.0
 
     if base in ("ref", "loop"):
         gather = w.batch * w.nnz_pad * w.n_b * fb
         idx = w.batch * w.nnz_pad * (8 if f32_path else 2 * ib)
         flops = 2.0 * w.batch * w.nnz_pad * w.n_b
-        bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
+        bytes_ = (gather + idx + SCATTER_PENALTY * out_bytes
+                  + w.batch * w.nnz_pad * d_x * vb + gfix)
         t = _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
         if base == "loop":
             # sequential per-sample execution: no cross-sample overlap, one
@@ -228,7 +273,7 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         flops = 2.0 * slots * w.n_b
         if base == "ell":
             bytes_ = slots * (w.n_b * fb + (8 if f32_path else ib + vb)) \
-                + out_bytes
+                + out_bytes + slots * d_x * vb + gfix
             return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
         plan = spmm_plan(w, impl)
         if plan.case == 3:
@@ -238,7 +283,8 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         per_step = (w.m_pad * plan.n_block * fb
                     + w.m_pad * w.k_pad
                     * ((w.itemsize + 4) if f32_path else (vb + ib)))
-        bytes_ = w.batch * plan.p * per_step + out_bytes
+        bytes_ = (w.batch * plan.p * per_step + out_bytes
+                  + slots * d_x * vb + gfix)
         steps = w.batch * plan.p
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
@@ -253,7 +299,8 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
             idx = w.batch * (w.nnz_pad * (8 if f32_path else 2 * ib)
                              + w.m_pad * 4)
             flops = 2.0 * w.batch * w.nnz_pad * w.n_b
-            bytes_ = gather + idx + SCATTER_PENALTY * out_bytes
+            bytes_ = (gather + idx + SCATTER_PENALTY * out_bytes
+                      + w.batch * w.nnz_pad * d_x * vb + gfix)
             return _roofline(flops, bytes_, vpu_peak, hw) + OP_OVERHEAD
         plan = spmm_plan(w, impl)
         if plan.case == 3:
@@ -264,7 +311,8 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         per_step = (w.m_pad * plan.n_block * fb
                     + w.nnz_pad * ((4 + w.itemsize) if f32_path else (ib + vb))
                     + 2 * w.m_pad * 4)
-        bytes_ = w.batch * plan.p * per_step + out_bytes
+        bytes_ = (w.batch * plan.p * per_step + out_bytes
+                  + w.batch * w.nnz_pad * d_x * vb + gfix)
         steps = w.batch * plan.p
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
@@ -281,7 +329,8 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         per_step = (w.m_pad * plan.n_block * fb
                     + chunks * _COO_CHUNK
                     * ((8 + w.itemsize) if f32_path else (2 * ib + vb)))
-        bytes_ = w.batch * plan.p * per_step + out_bytes
+        bytes_ = (w.batch * plan.p * per_step + out_bytes
+                  + w.batch * w.nnz_pad * d_x * vb + gfix)
         steps = w.batch * plan.p
         eff = _mxu_eff(w.m_pad, plan.n_block)
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
@@ -356,8 +405,13 @@ def rank(w: Workload, *, allow_pallas: bool = True,
     the XLA-lowered impls. ``w.dtype`` widens the ladder with the matching
     reduced-precision variants (DESIGN.md §10).
     """
-    scored = [(i, estimate(w, i, hw)) for i in _candidates(w.dtype,
-                                                           allow_pallas)]
+    cands = _candidates(w.dtype, allow_pallas)
+    if w.is_gspmm:
+        # op × reduce × edge-feature workloads only admit the g-SpMM-capable
+        # impls (DESIGN.md §11): the GEMM class IS the (mul, sum) product,
+        # and the precision variants are (mul, sum)-only.
+        cands = [c for c in cands if supports_gspmm(c)]
+    scored = [(i, estimate(w, i, hw)) for i in cands]
     scored = [(i, t) for i, t in scored if t != float("inf")]
     return tuple(sorted(scored, key=lambda it: it[1]))
 

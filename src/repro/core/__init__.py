@@ -23,8 +23,16 @@ from repro.core.batching import (  # noqa: F401
     plan_fused_graph_conv,
 )
 from repro.core.spmm import (  # noqa: F401
+    GSPMM_OPS,
+    GSPMM_REDUCES,
     IMPLS,
+    batched_gspmm,
     batched_spmm,
     dense_batched_matmul,
+    resolve_gspmm_impl,
     resolve_impl,
+)
+from repro.core.message_passing import (  # noqa: F401
+    message_passing,
+    resolve_message_passing_impl,
 )

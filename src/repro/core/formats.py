@@ -76,7 +76,8 @@ class BatchedCOO:
     """SparseTensor/COO analogue: flat non-zero triples, padded to nnz_pad.
 
     row_ids, col_ids : (batch, nnz_pad) int32  — padding points at row/col 0
-    values           : (batch, nnz_pad) float  — padding is 0.0
+    values           : (batch, nnz_pad) float  — padding is 0.0. g-SpMM edge
+                       features may add a trailing axis: (batch, nnz_pad, d_e)
     nnz              : (batch,) int32          — true nnz per matrix
     n_rows           : (batch,) int32          — true m_A per matrix
     """
@@ -147,7 +148,8 @@ class BatchedELL:
     kernel (the SWA-CSR analogue — see DESIGN.md §2).
 
     col_ids : (batch, m_pad, k_pad) int32  — padding points at column 0
-    values  : (batch, m_pad, k_pad) float  — padding is 0.0
+    values  : (batch, m_pad, k_pad) float  — padding is 0.0 (g-SpMM vector
+              edges append a trailing (…, d_e) axis)
     n_rows  : (batch,) int32
     """
 
@@ -251,18 +253,26 @@ def csr_transpose(csr: BatchedCSR, n_cols: int | None = None) -> BatchedCSR:
     return coo_to_csr(coo_t, n_cols)
 
 
+def row_degrees(coo: BatchedCOO, m_pad: int) -> jax.Array:
+    """(batch, m_pad) int32 — the true per-row non-zero count of each sample
+    (only valid slots counted; padding rows are 0). This is the g-SpMM
+    validity statistic: a ``mean`` reduce divides by it, a ``max`` reduce
+    replaces rows where it is 0 with the identity element, and the ELL
+    kernel's masked slot loop reads it as the per-row live-slot bound."""
+
+    def one(rid, nnz):
+        valid = (jnp.arange(rid.shape[0]) < nnz).astype(jnp.int32)
+        return jnp.zeros((m_pad,), jnp.int32).at[
+            jnp.clip(rid, 0, m_pad - 1)].add(valid)
+
+    return jax.vmap(one)(coo.row_ids, coo.nnz)
+
+
 def max_row_degree(coo: BatchedCOO, m_pad: int) -> jax.Array:
     """(batch,) int32 — the true max nnz in any single row of each sample
     (only valid slots counted). This is the statistic ``k_pad`` must cover
     for an ELL conversion to be lossless."""
-
-    def one(rid, nnz):
-        valid = (jnp.arange(rid.shape[0]) < nnz).astype(jnp.int32)
-        counts = jnp.zeros((m_pad,), jnp.int32).at[
-            jnp.clip(rid, 0, m_pad - 1)].add(valid)
-        return jnp.max(counts)
-
-    return jax.vmap(one)(coo.row_ids, coo.nnz)
+    return jnp.max(row_degrees(coo, m_pad), axis=1)
 
 
 def validate_ell_k_pad(coo: BatchedCOO, m_pad: int, k_pad: int,
@@ -342,11 +352,15 @@ def coo_to_ell(coo: BatchedCOO, m_pad: int, k_pad: int,
             .set(jnp.where(ok, cid_s, 0))[:-1]
             .reshape(m_pad, k_pad)
         )
+        # values may carry a trailing edge-feature axis (g-SpMM vector
+        # edges): the scatter runs over the flat slot axis either way
+        tail = val.shape[1:]
+        ok_b = ok.reshape((-1,) + (1,) * len(tail))
         val_out = (
-            jnp.zeros((m_pad * k_pad + 1,), val.dtype)
+            jnp.zeros((m_pad * k_pad + 1,) + tail, val.dtype)
             .at[flat]
-            .set(jnp.where(ok, val_s, 0))[:-1]
-            .reshape(m_pad, k_pad)
+            .set(jnp.where(ok_b, val_s, 0))[:-1]
+            .reshape((m_pad, k_pad) + tail)
         )
         return col_out, val_out
 

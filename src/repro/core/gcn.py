@@ -34,6 +34,16 @@ class GCNConfig:
     conv_widths: tuple[int, ...] = (64, 64)   # Tox21: two layers of 64
     n_tasks: int = 12             # Tox21: 12 binary tasks
     task: str = "multitask_binary"  # or "multiclass"
+    layer: str = "gcn"            # conv layer kind (DESIGN.md §11):
+                                  # "gcn"  — channel-summed graph conv
+                                  #          (paper eq. (2));
+                                  # "gat"  — multi-head attention over the
+                                  #          first adjacency channel's
+                                  #          connectivity (models/gnn.py);
+                                  # "rgcn" — adjacency channels as relations
+                                  #          with per-relation weights
+    heads: int = 4                # attention heads (layer="gat" only; every
+                                  # conv width must divide by it)
     impl: str = "auto"            # layer implementation (repro.core.spmm.IMPLS
                                   # incl. the "fused" megakernel; "auto" =
                                   # adaptive dispatch, DESIGN.md §5/§7)
@@ -65,12 +75,26 @@ class GCNConfig:
                          task="multiclass", **kw)
 
 
+def _init_conv(key, cfg: GCNConfig, n_in: int, n_out: int):
+    """One conv layer's params for ``cfg.layer`` (DESIGN.md §11)."""
+    if cfg.layer == "gcn":
+        return init_graph_conv(key, n_in, n_out, cfg.channels)
+    from repro.models.gnn import init_gat_layer, init_rgcn_layer
+
+    if cfg.layer == "gat":
+        return init_gat_layer(key, n_in, n_out, cfg.heads)
+    if cfg.layer == "rgcn":
+        return init_rgcn_layer(key, n_in, n_out, cfg.channels)
+    raise ValueError(f"unknown layer kind {cfg.layer!r}: expected 'gcn', "
+                     "'gat' or 'rgcn'")
+
+
 def init_gcn(key, cfg: GCNConfig):
     keys = jax.random.split(key, len(cfg.conv_widths) + 1)
     params = {"convs": [], "bns": []}
     n_in = cfg.n_features
     for i, w in enumerate(cfg.conv_widths):
-        params["convs"].append(init_graph_conv(keys[i], n_in, w, cfg.channels))
+        params["convs"].append(_init_conv(keys[i], cfg, n_in, w))
         params["bns"].append({
             "scale": jnp.ones((w,), jnp.float32),
             "bias": jnp.zeros((w,), jnp.float32),
@@ -97,7 +121,14 @@ def resolve_conv_impls(cfg: GCNConfig, batch: int, m_pad: int, nnz_pad: int,
     this whole tuple. ``itemsize`` must match the features the runtime will
     actually carry (the Workload key embeds it, and the tuning cache is
     keyed per itemsize) — default 4 for the f32 GCN stack. Pure shape work:
-    safe to call host-side per geometry."""
+    safe to call host-side per geometry.
+
+    ``cfg.layer`` selects the workload shape (DESIGN.md §11): ``"gcn"``
+    resolves the graph-conv LAYER workload (fused megakernel vs stacked
+    SpMM); ``"gat"`` resolves the attention aggregation's vector-edge
+    ``(mul, sum)`` g-SpMM over the head-flattened batch; ``"rgcn"`` the
+    ``(copy_lhs, mean)`` g-SpMM over the relation-flattened batch — both
+    over the g-SpMM-capable candidate subset."""
     from repro import autotune
     from repro.kernels import resolve_interpret
 
@@ -107,18 +138,34 @@ def resolve_conv_impls(cfg: GCNConfig, batch: int, m_pad: int, nnz_pad: int,
     dtype = (autotune.precision_of(cfg.impl)[1] if cfg.impl != "auto"
              else cfg.precision)
     for n_out in cfg.conv_widths:
-        w = autotune.Workload(
-            batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=cfg.k_pad,
-            n_b=n_out, itemsize=itemsize, channels=cfg.channels, n_in=n_in,
-            dtype=dtype)
+        if cfg.layer == "gat":
+            d_head = n_out // cfg.heads
+            w = autotune.Workload(
+                batch=batch * cfg.heads, m_pad=m_pad, nnz_pad=nnz_pad,
+                k_pad=cfg.k_pad, n_b=d_head, itemsize=itemsize,
+                dtype=dtype, d_e=d_head)
+        elif cfg.layer == "rgcn":
+            w = autotune.Workload(
+                batch=batch * cfg.channels, m_pad=m_pad, nnz_pad=nnz_pad,
+                k_pad=cfg.k_pad, n_b=n_out, itemsize=itemsize,
+                dtype=dtype, op="copy_lhs", reduce="mean")
+        else:
+            w = autotune.Workload(
+                batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=cfg.k_pad,
+                n_b=n_out, itemsize=itemsize, channels=cfg.channels,
+                n_in=n_in, dtype=dtype)
         if mesh is not None:
             from repro.distributed.spmm import shard_count
 
             w = w.shard(shard_count(mesh, "data"))
         if cfg.impl != "auto":
             decisions.append(autotune.forced_decision(w, cfg.impl))
-        else:
+        elif cfg.layer == "gcn":
             decisions.append(autotune.select_graph_conv_impl(
+                w, allow_pallas=not interpret,
+                cache=autotune.default_cache()))
+        else:
+            decisions.append(autotune.select_impl(
                 w, allow_pallas=not interpret,
                 cache=autotune.default_cache()))
         n_in = n_out
@@ -164,9 +211,23 @@ def apply_gcn(
     mask = (
         jnp.arange(x.shape[1])[None, :, None] < n_nodes[:, None, None]
     ).astype(x.dtype)
+    if cfg.layer != "gcn" and not cfg.batched:
+        # GAT/R-GCN only exist on the batched g-SpMM stack — there is no
+        # Fig. 6 per-sample baseline for them
+        raise ValueError(f"layer={cfg.layer!r} requires batched=True")
     h = x
     for conv_p, bn_p in zip(params["convs"], params["bns"]):
-        if cfg.batched:
+        if cfg.layer == "gat":
+            from repro.models.gnn import gat_layer
+
+            h = gat_layer(conv_p, adj[0], h, impl=cfg.impl, k_pad=cfg.k_pad,
+                          interpret=cfg.interpret, mesh=mesh)
+        elif cfg.layer == "rgcn":
+            from repro.models.gnn import rgcn_layer
+
+            h = rgcn_layer(conv_p, adj, h, impl=cfg.impl, k_pad=cfg.k_pad,
+                           interpret=cfg.interpret, mesh=mesh)
+        elif cfg.batched:
             h = graph_conv_batched(conv_p, adj, h, impl=cfg.impl,
                                    k_pad=cfg.k_pad, interpret=cfg.interpret,
                                    mesh=mesh, precision=cfg.precision)

@@ -11,18 +11,25 @@ imported lazily so ``repro.core`` stays importable without touching the
 distributed stack.
 """
 from repro.kernels.ops import (
+    GSPMM_OPS,
+    GSPMM_REDUCES,
     IMPLS,
+    batched_gspmm,
     batched_spmm,
     dense_batched_matmul,
+    resolve_gspmm_impl,
     resolve_impl,
 )
 
-__all__ = ["IMPLS", "batched_spmm", "dense_batched_matmul", "resolve_impl",
-           "sharded_batched_spmm", "resolve_sharded_impl"]
+__all__ = ["GSPMM_OPS", "GSPMM_REDUCES", "IMPLS", "batched_gspmm",
+           "batched_spmm", "dense_batched_matmul", "resolve_gspmm_impl",
+           "resolve_impl", "sharded_batched_spmm", "sharded_batched_gspmm",
+           "resolve_sharded_impl"]
 
 
 def __getattr__(name):
-    if name in ("sharded_batched_spmm", "resolve_sharded_impl"):
+    if name in ("sharded_batched_spmm", "sharded_batched_gspmm",
+                "resolve_sharded_impl"):
         from repro.distributed import spmm as _dspmm
 
         return getattr(_dspmm, name)

@@ -38,8 +38,10 @@ from repro.kernels import resolve_interpret
 
 __all__ = [
     "pad_batch",
+    "resolve_sharded_gspmm_impl",
     "resolve_sharded_impl",
     "shard_count",
+    "sharded_batched_gspmm",
     "sharded_batched_spmm",
     "sharded_fused_graph_conv",
 ]
@@ -185,6 +187,123 @@ def sharded_batched_spmm(
     def bwd(res, dc):
         values, bb = res
         return bwd_sharded(row_ids, col_ids, nnz, values, bb, dc)
+
+    f.defvjp(fwd, bwd)
+    out = f(a.values, b)
+    return out[:batch] if pad else out
+
+
+def resolve_sharded_gspmm_impl(
+    a: BatchedCOO,
+    b: jax.Array,
+    mesh: Mesh,
+    *,
+    op: str = "mul",
+    reduce: str = "sum",
+    axis: str = "data",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+):
+    """Resolve a g-SpMM ``impl`` against the PER-SHARD workload shapes — the
+    :func:`resolve_sharded_impl` analogue with the ``(op, reduce, d_e)``
+    workload axes set, so the ranked ladder is restricted to the
+    g-SpMM-capable subset (DESIGN.md §11)."""
+    from repro import autotune
+
+    interpret = resolve_interpret(interpret)
+    n = shard_count(mesh, axis)
+    batch, m_pad, n_b = b.shape
+    d_e = a.values.shape[2] if a.values.ndim == 3 else None
+    w = autotune.Workload(batch=batch, m_pad=m_pad,
+                          nnz_pad=a.row_ids.shape[1], k_pad=k_pad,
+                          n_b=n_b, itemsize=b.dtype.itemsize,
+                          d_e=d_e, reduce=reduce, op=op).shard(n)
+    if impl != "auto":
+        return autotune.forced_decision(w, impl, note=f" ({n}-way sharded)")
+    return autotune.select_impl(w, allow_pallas=not interpret,
+                                cache=autotune.default_cache())
+
+
+def sharded_batched_gspmm(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    op: str = "mul",
+    reduce: str = "sum",
+    mesh: Mesh,
+    axis: str = "data",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """g-SpMM (``C[r] = reduce op(B[c], e)``, DESIGN.md §11) with the batch
+    axis sharded over ``mesh[axis]``.
+
+    Same structure as :func:`sharded_batched_spmm`: zero-nnz batch padding
+    (harmless for every ``(op, reduce)`` corner — a padded sample has
+    ``nnz = 0``, so all its slots are masked and every row takes the 0.0
+    identity), per-shard ``impl="auto"`` resolution, custom VJP outside the
+    shard_map with ``kernels.ops.gspmm_backward`` running per shard. The
+    ``(mul, sum)`` scalar-edge corner delegates to
+    :func:`sharded_batched_spmm` exactly like the local entry point.
+    """
+    from repro.autotune.cost_model import GSPMM_IMPLS, supports_gspmm
+    from repro.kernels.ops import _forward, batched_gspmm, gspmm_backward
+
+    interpret = resolve_interpret(interpret)
+    if (op, reduce) == ("mul", "sum") and a.values.ndim == 2:
+        return sharded_batched_spmm(a, b, mesh=mesh, axis=axis, impl=impl,
+                                    k_pad=k_pad, interpret=interpret)
+    n = shard_count(mesh, axis)
+    if n == 1:
+        return batched_gspmm(a, b, op=op, reduce=reduce, impl=impl,
+                             k_pad=k_pad, interpret=interpret)
+
+    batch = b.shape[0]
+    a, b, pad = pad_batch(a, b, n)
+    concrete = resolve_sharded_gspmm_impl(
+        a, b, mesh, op=op, reduce=reduce, axis=axis, impl=impl,
+        k_pad=k_pad, interpret=interpret).impl
+    if not supports_gspmm(concrete):
+        raise ValueError(
+            f"impl {concrete!r} cannot run g-SpMM (op={op!r}, "
+            f"reduce={reduce!r}); the capable set is {GSPMM_IMPLS} at f32")
+
+    spec = P(axis)      # dim-0 (batch) sharding for every operand
+    row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
+
+    def _fwd_local(rids, cids, nz, values, b_local):
+        return _forward(rids, cids, nz, values, b_local, impl=concrete,
+                        k_pad=k_pad, interpret=interpret, op=op,
+                        reduce=reduce)
+
+    fwd_sharded = shard_map(
+        _fwd_local, mesh=mesh, in_specs=(spec,) * 5, out_specs=spec,
+        check_rep=False)
+
+    def _bwd_local(rids, cids, nz, values, b_local, c_local, dc):
+        return gspmm_backward(rids, cids, nz, values, b_local, c_local, dc,
+                              op=op, reduce=reduce, impl=concrete,
+                              interpret=interpret)
+
+    bwd_sharded = shard_map(
+        _bwd_local, mesh=mesh, in_specs=(spec,) * 7,
+        out_specs=(spec, spec), check_rep=False)
+
+    @jax.custom_vjp
+    def f(values, bb):
+        return fwd_sharded(row_ids, col_ids, nnz, values, bb)
+
+    def fwd(values, bb):
+        c = f(values, bb)
+        # only the max backward consumes the forward output (argmax routing)
+        return c, (values, bb, c if reduce == "max" else None)
+
+    def bwd(res, dc):
+        values, bb, c = res
+        cf = c if c is not None else jnp.zeros_like(dc)
+        return bwd_sharded(row_ids, col_ids, nnz, values, bb, cf, dc)
 
     f.defvjp(fwd, bwd)
     out = f(a.values, b)

@@ -15,6 +15,20 @@ The GPU version splits work by *non-zero* and resolves output races with
 Accumulation across chunks happens in a VMEM-resident f32 accumulator — the
 shared-memory-resident output of Fig. 5-(a) — and the column-panel grid
 dimension reproduces the cache blocking of Fig. 5-(b).
+
+g-SpMM generalization (DESIGN.md §11): a static ``(op, reduce)`` pair turns
+``C[rid] += val · B[cid]`` into ``C[rid] = reduce(op(B[cid], e))``. The
+``(mul, sum)`` corner keeps the unmasked legacy path (padding values 0.0
+are neutral); every other corner takes the per-matrix true non-zero count
+``nnz`` (SMEM scalar) and masks slots ``i ≥ nnz`` explicitly. ``sum`` stays
+a one-hot MXU contraction. ``max`` has no dot-product form — it runs a
+one-hot *select*: each SUB-slot group of the chunk broadcasts its messages
+against its one-hot row mask and folds with ``maximum`` (the (SUB, m_pad,
+n_block) intermediate bounds the VMEM cost of a full-chunk broadcast).
+``mean`` and the empty-row identity fix-up of ``max`` are applied by the
+wrapper after the kernel (an XLA degree count — the kernel itself only
+knows sum/max). Edge values may be scalars ``(batch, nnz_pad)`` or feature
+vectors ``(batch, nnz_pad, d_e)`` with ``d_e == n_b``.
 """
 from __future__ import annotations
 
@@ -23,23 +37,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.batching import CHUNK, BatchPlan
 from repro.kernels import resolve_interpret
 
+NEG_INF = -3.0e38   # finite stand-in for -inf (matches kernels/ref.py)
+# one-hot-select group size for the max reduce: bounds the broadcast
+# intermediate at (SUB, m_pad, n_block) f32 in VMEM per fold
+_MAX_SUB = 8
 
-def _kernel(rid_ref, cid_ref, val_ref, b_ref, c_ref, *, m_pad: int, chunks: int):
+
+def _kernel(*refs, m_pad: int, chunks: int, has_nnz: bool, op: str,
+            reduce: str):
+    refs = list(refs)
+    nnz_ref = refs.pop(0) if has_nnz else None
+    rid_ref, cid_ref, val_ref, b_ref, c_ref = refs
     bb = b_ref[0]                                    # (m_pad, n_block)
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, m_pad), 1)
 
-    def body(i, acc):
+    def messages(i):
         sl = pl.dslice(i * CHUNK, CHUNK)
         # ids may be narrowed int16 storage (DESIGN.md §10); widen to int32
         # for the take / iota compare — Mosaic wants 32-bit indices
         rid = rid_ref[0, sl].astype(jnp.int32)       # (CHUNK,)
         cid = cid_ref[0, sl].astype(jnp.int32)
-        val = val_ref[0, sl].astype(jnp.float32)
-        g = jnp.take(bb, cid, axis=0).astype(jnp.float32) * val[:, None]
+        g = jnp.take(bb, cid, axis=0).astype(jnp.float32)
+        if op != "copy_lhs":
+            val = val_ref[0, sl].astype(jnp.float32)  # (CHUNK[, n_block])
+            if val.ndim == 1:
+                val = val[:, None]
+            g = g * val if op == "mul" else g + val
+        valid = None
+        if has_nnz:
+            # explicit validity: the padding invariant (value 0.0 neutral)
+            # only holds for (mul, sum)
+            valid = (i * CHUNK + jax.lax.iota(jnp.int32, CHUNK)) < nnz_ref[0]
+        return rid, g, valid
+
+    def body_sum(i, acc):
+        rid, g, valid = messages(i)
+        if valid is not None:
+            g = jnp.where(valid[:, None], g, 0.0)
         p = (rid[:, None] == row_iota).astype(jnp.float32)   # (CHUNK, m_pad)
         # scatter-add as MXU contraction: acc[r] += Σ_i p[i, r] * g[i]
         return acc + jax.lax.dot_general(
@@ -47,49 +86,106 @@ def _kernel(rid_ref, cid_ref, val_ref, b_ref, c_ref, *, m_pad: int, chunks: int)
             preferred_element_type=jnp.float32,
         )
 
+    def body_max(i, acc):
+        rid, g, valid = messages(i)
+        g = jnp.where(valid[:, None], g, NEG_INF)
+        p = rid[:, None] == row_iota                         # (CHUNK, m_pad)
+        # one-hot select: no dot-product form for max, so fold SUB slots at
+        # a time — candidate[s, r, :] is message s where it targets row r
+        for s in range(0, CHUNK, _MAX_SUB):
+            cand = jnp.where(p[s:s + _MAX_SUB, :, None],
+                             g[s:s + _MAX_SUB, None, :], NEG_INF)
+            acc = jnp.maximum(acc, jnp.max(cand, axis=0))
+        return acc
+
+    init = NEG_INF if reduce == "max" else 0.0
     acc = jax.lax.fori_loop(
-        0, chunks, body, jnp.zeros(c_ref.shape[1:], jnp.float32)
+        0, chunks, body_max if reduce == "max" else body_sum,
+        jnp.full(c_ref.shape[1:], init, jnp.float32)
     )
     c_ref[0] = acc.astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "interpret", "op", "reduce"))
 def batched_spmm_coo(
     row_ids: jax.Array,   # (batch, nnz_pad) int32
     col_ids: jax.Array,   # (batch, nnz_pad) int32
-    values: jax.Array,    # (batch, nnz_pad)
+    values: jax.Array,    # (batch, nnz_pad[, d_e])
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
+    nnz: jax.Array | None = None,     # (batch,) true nnz; g-SpMM masking
+    op: str = "mul",
+    reduce: str = "sum",
     interpret: bool | None = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
     batch, nnz_pad = row_ids.shape
     m_pad, n_b = b.shape[1], b.shape[2]
     assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+    if (op, reduce) != ("mul", "sum"):
+        assert nnz is not None, \
+            f"({op}, {reduce}) needs the per-matrix true nnz for masking"
+    vec = values.ndim == 3
+    if vec:
+        assert values.shape[-1] == n_b, \
+            f"vector edge features need d_e == n_b, got {values.shape[-1]}"
     if nnz_pad % CHUNK:
         pad = CHUNK - nnz_pad % CHUNK
         row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)), constant_values=m_pad)
         col_ids = jnp.pad(col_ids, ((0, 0), (0, pad)))
-        values = jnp.pad(values, ((0, 0), (0, pad)))
+        values = jnp.pad(values, ((0, 0), (0, pad)) + ((0, 0),) * vec)
         nnz_pad += pad
     chunks = nnz_pad // CHUNK
 
     n_block, p = plan.n_block, plan.p
     if n_b % n_block:
-        b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
+        pad = p * n_block - n_b
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        if vec:
+            values = jnp.pad(values, ((0, 0), (0, 0), (0, pad)))
+
+    # the kernel reduces sum or max; mean = sum kernel + XLA degree scale,
+    # and max needs the empty-row identity fix-up — both via the true
+    # per-row degree, an XLA scatter-add over the (cheap) index arrays
+    kernel_reduce = "sum" if reduce == "mean" else reduce
+    val_spec = (
+        pl.BlockSpec((1, nnz_pad, n_block), lambda i, j: (i, 0, j))
+        if vec else pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)))
+    in_specs = [
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        val_spec,
+        pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+    ]
+    operands = [row_ids, col_ids, values, b]
+    if nnz is not None:
+        in_specs.insert(0, pl.BlockSpec((1,), lambda i, j: (i,),
+                                        memory_space=pltpu.SMEM))
+        operands.insert(0, nnz.astype(jnp.int32))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, m_pad=m_pad, chunks=chunks),
+        functools.partial(_kernel, m_pad=m_pad, chunks=chunks,
+                          has_nnz=nnz is not None, op=op,
+                          reduce=kernel_reduce),
         grid=(batch, p),
-        in_specs=[
-            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
         interpret=interpret,
-    )(row_ids, col_ids, values, b)
-    return out[..., :n_b]
+    )(*operands)
+    out = out[..., :n_b]
+    if reduce in ("mean", "max"):
+        valid = (jnp.arange(nnz_pad)[None, :] < nnz[:, None]).astype(
+            jnp.float32)
+        deg = jax.vmap(
+            lambda r, v: jnp.zeros((m_pad,), jnp.float32).at[
+                jnp.clip(r.astype(jnp.int32), 0, m_pad - 1)].add(v)
+        )(row_ids, valid)
+        if reduce == "mean":
+            out = out / jnp.maximum(deg, 1.0)[..., None].astype(out.dtype)
+        else:
+            out = jnp.where(deg[..., None] > 0, out,
+                            jnp.zeros((), out.dtype))
+    return out

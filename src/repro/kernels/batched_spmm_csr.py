@@ -29,6 +29,15 @@ races — and the flat nnz arrays mean HBM traffic scales with ``nnz_pad``
 ``rpt`` enters as host-precomputed ``start = rpt[:, :-1]`` / ``rlen =
 diff(rpt)`` panels (cheap XLA slices) so the kernel never indexes the
 unaligned ``(m_pad + 1,)`` pointer array.
+
+g-SpMM generalization (DESIGN.md §11): a static ``(op, reduce)`` pair turns
+the masked multiply-accumulate into ``reduce_k op(B[cid], e)``. The CSR row
+loop already owns the per-row validity mask (``k < rlen``), so the matrix
+extends for free: ``max`` accumulates from a finite -inf stand-in (masked
+slots contribute the sentinel, empty rows are rewritten to the 0.0
+identity), ``mean`` divides the masked sum by ``max(rlen, 1)``. Edge values
+may be flat scalars ``(batch, nnz_pad)`` or per-edge feature vectors
+``(batch, nnz_pad, d_e)`` with ``d_e == n_b``, panel-blocked like B.
 """
 from __future__ import annotations
 
@@ -43,7 +52,10 @@ from repro.core.batching import BatchPlan
 from repro.kernels import resolve_interpret
 
 
-def _kernel(*refs, has_scale: bool):
+NEG_INF = -3.0e38   # finite stand-in for -inf (matches kernels/ref.py)
+
+
+def _kernel(*refs, has_scale: bool, op: str, reduce: str):
     if has_scale:
         (scale_ref, rowmax_ref, start_ref, rlen_ref, cid_ref, val_ref, b_ref,
          c_ref) = refs
@@ -55,24 +67,37 @@ def _kernel(*refs, has_scale: bool):
     # col ids may be narrowed int16 storage (DESIGN.md §10); widen to int32
     # before the B gather — Mosaic requires 32-bit take indices
     cid = cid_ref[0]                         # (nnz_pad,) int32/int16, flat
-    val = val_ref[0]                         # (nnz_pad,), flat
+    val = val_ref[0]                         # (nnz_pad[, n_block]), flat
     bb = b_ref[0]                            # (m_pad, n_block)
     nnz_pad = cid.shape[0]
 
     def body(k, acc):
         # row r's k-th non-zero sits at flat slot rpt[r] + k; rows shorter
-        # than k are masked (their clamped gather is multiplied by 0.0)
+        # than k are masked (the row-split validity the g-SpMM corners need)
         idx = jnp.minimum(start + k, nnz_pad - 1)
-        live = k < rlen                                  # (m_pad,) bool
-        v = jnp.where(live, jnp.take(val, idx, axis=0), 0).astype(jnp.float32)
+        live = (k < rlen)[:, None]                       # (m_pad, 1) bool
         c = jnp.take(cid, idx, axis=0).astype(jnp.int32)
         rows = jnp.take(bb, c, axis=0).astype(jnp.float32)  # sublane gather
-        return acc + v[:, None] * rows
+        if op == "copy_lhs":
+            msg = rows
+        else:
+            e = jnp.take(val, idx, axis=0).astype(jnp.float32)
+            if e.ndim == 1:
+                e = e[:, None]
+            msg = rows * e if op == "mul" else rows + e
+        if reduce == "max":
+            return jnp.maximum(acc, jnp.where(live, msg, NEG_INF))
+        return acc + jnp.where(live, msg, 0.0)
 
     # rpt-bounded dynamic trip count: THIS matrix's max row degree, from SMEM
+    init = NEG_INF if reduce == "max" else 0.0
     acc = jax.lax.fori_loop(
-        0, rowmax_ref[0], body, jnp.zeros(c_ref.shape[1:], jnp.float32)
+        0, rowmax_ref[0], body, jnp.full(c_ref.shape[1:], init, jnp.float32)
     )
+    if reduce == "max":
+        acc = jnp.where((rlen > 0)[:, None], acc, 0.0)
+    elif reduce == "mean":
+        acc = acc / jnp.maximum(rlen, 1).astype(jnp.float32)[:, None]
     if has_scale:
         # int8 path: values are quantization codes; the reduction is linear
         # in them, so the per-matrix dequantization scale applies once to the
@@ -81,15 +106,18 @@ def _kernel(*refs, has_scale: bool):
     c_ref[0] = acc.astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "interpret", "op", "reduce"))
 def batched_spmm_csr(
     rpt: jax.Array,       # (batch, m_pad + 1) int32
     col_ids: jax.Array,   # (batch, nnz_pad) int32/int16, row-sorted
-    values: jax.Array,    # (batch, nnz_pad); int8 codes when scale given
+    values: jax.Array,    # (batch, nnz_pad[, d_e]); int8 when scale given
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
     scale: jax.Array | None = None,   # (batch,) f32 dequantization scale
+    op: str = "mul",
+    reduce: str = "sum",
     interpret: bool | None = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
@@ -97,6 +125,12 @@ def batched_spmm_csr(
     nnz_pad = col_ids.shape[1]
     n_b = b.shape[-1]
     assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+    if (op, reduce) != ("mul", "sum"):
+        assert scale is None, "precision variants are (mul, sum)-only"
+    vec = values.ndim == 3
+    if vec:
+        assert values.shape[-1] == n_b, \
+            f"vector edge features need d_e == n_b, got {values.shape[-1]}"
 
     start = rpt[:, :-1]
     rlen = rpt[:, 1:] - rpt[:, :-1]
@@ -104,14 +138,20 @@ def batched_spmm_csr(
 
     n_block, p = plan.n_block, plan.p
     if n_b % n_block:
-        b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
+        pad = p * n_block - n_b
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        if vec:
+            values = jnp.pad(values, ((0, 0), (0, 0), (0, pad)))
 
+    val_spec = (
+        pl.BlockSpec((1, nnz_pad, n_block), lambda i, j: (i, 0, j))
+        if vec else pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)))
     in_specs = [
         pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
         pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
         pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),
         pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
-        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        val_spec,
         pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
     ]
     operands = [rowmax, start, rlen, col_ids, values, b]
@@ -121,7 +161,8 @@ def batched_spmm_csr(
         operands.insert(0, scale.astype(jnp.float32))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, has_scale=scale is not None),
+        functools.partial(_kernel, has_scale=scale is not None,
+                          op=op, reduce=reduce),
         grid=(batch, p),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),

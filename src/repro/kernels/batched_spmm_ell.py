@@ -15,6 +15,17 @@ Mapping (see DESIGN.md §2):
 The gather ``B[col_ids[:, k], :]`` is a sublane-axis dynamic gather
 (``jnp.take``), which Mosaic supports; padded slots gather row 0 with weight
 0.0.
+
+g-SpMM generalization (DESIGN.md §11): a static ``(op, reduce)`` pair turns
+the inner multiply-accumulate into ``reduce_k op(B[cid[:, k]], e_k)``. Any
+corner other than ``(mul, sum)`` breaks the padding invariant (a zero-valued
+slot is NOT neutral under ``add``/``copy_lhs``/``max``/``mean``), so those
+paths take a per-row live-slot bound ``rlen`` and mask slot ``k`` with
+``k < rlen`` — the same row-split masking the CSR kernel always does. Edge
+values may be scalars ``(batch, m_pad, k_pad)`` or per-edge feature vectors
+``(batch, m_pad, k_pad, d_e)`` with ``d_e == n_b`` (panel-blocked alongside
+B). ``max`` accumulates from a finite -inf stand-in and rewrites empty rows
+to the 0.0 identity; ``mean`` divides the sum by ``max(rlen, 1)``.
 """
 from __future__ import annotations
 
@@ -28,24 +39,47 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.batching import BatchPlan
 from repro.kernels import resolve_interpret
 
+NEG_INF = -3.0e38   # finite stand-in for -inf (matches kernels/ref.py)
 
-def _kernel(*refs, k_pad: int, has_scale: bool):
-    if has_scale:
-        scale_ref, cid_ref, val_ref, b_ref, c_ref = refs
-    else:
-        cid_ref, val_ref, b_ref, c_ref = refs
-        scale_ref = None
+
+def _kernel(*refs, k_pad: int, has_scale: bool, has_rlen: bool,
+            op: str, reduce: str):
+    refs = list(refs)
+    scale_ref = refs.pop(0) if has_scale else None
+    rlen_ref = refs.pop(0) if has_rlen else None
+    cid_ref, val_ref, b_ref, c_ref = refs
     # col ids may arrive as narrowed int16 storage (DESIGN.md §10); widen to
     # int32 before the gather — Mosaic requires 32-bit take indices
     cid = cid_ref[0].astype(jnp.int32)      # (m_pad, k_pad)
-    val = val_ref[0]            # (m_pad, k_pad); f32/bf16 or int8 codes
+    val = val_ref[0]    # (m_pad, k_pad[, n_block]); int8 codes when scaled
     bb = b_ref[0]               # (m_pad, n_block)
-    acc = jnp.zeros(c_ref.shape[1:], jnp.float32)
+    rlen = rlen_ref[0] if has_rlen else None      # (m_pad,) int32 live bound
+    init = NEG_INF if reduce == "max" else 0.0
+    acc = jnp.full(c_ref.shape[1:], init, jnp.float32)
     for k in range(k_pad):      # static unroll; k_pad is small (nnz/row max)
-        rows = jnp.take(bb, cid[:, k], axis=0)          # sublane gather
-        acc = acc + val[:, k].astype(jnp.float32)[:, None] * rows.astype(
-            jnp.float32
-        )
+        rows = jnp.take(bb, cid[:, k], axis=0).astype(jnp.float32)
+        if op == "copy_lhs":
+            msg = rows
+        else:
+            e = val[:, k].astype(jnp.float32)     # (m_pad,) or (m_pad, n_blk)
+            if e.ndim == 1:
+                e = e[:, None]
+            msg = rows * e if op == "mul" else rows + e
+        if not has_rlen:
+            # (mul, sum) fast path: padded slots carry value 0.0 and are
+            # already neutral — the legacy SpMM inner loop, unmasked
+            acc = acc + msg
+        else:
+            live = (k < rlen)[:, None]
+            if reduce == "max":
+                acc = jnp.maximum(acc, jnp.where(live, msg, NEG_INF))
+            else:
+                acc = acc + jnp.where(live, msg, 0.0)
+    if has_rlen:
+        if reduce == "max":
+            acc = jnp.where((rlen > 0)[:, None], acc, 0.0)
+        elif reduce == "mean":
+            acc = acc / jnp.maximum(rlen, 1).astype(jnp.float32)[:, None]
     if has_scale:
         # int8 path: values are quantization codes; SpMM is linear in them,
         # so the per-matrix dequantization scale applies to the f32
@@ -54,38 +88,60 @@ def _kernel(*refs, k_pad: int, has_scale: bool):
     c_ref[0] = acc.astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "interpret", "op", "reduce"))
 def batched_spmm_ell(
     col_ids: jax.Array,   # (batch, m_pad, k_pad) int32 or int16
-    values: jax.Array,    # (batch, m_pad, k_pad); int8 codes when scale given
+    values: jax.Array,    # (batch, m_pad, k_pad[, d_e]); int8 when scaled
     b: jax.Array,         # (batch, m_pad, n_b)
     *,
     plan: BatchPlan,
     scale: jax.Array | None = None,   # (batch,) f32 dequantization scale
+    rlen: jax.Array | None = None,    # (batch, m_pad) int32 live-slot bound
+    op: str = "mul",
+    reduce: str = "sum",
     interpret: bool | None = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
     batch, m_pad, k_pad = col_ids.shape
     n_b = b.shape[-1]
     assert plan.batch == batch and plan.m_pad == m_pad and plan.n_b == n_b, plan
+    if (op, reduce) != ("mul", "sum"):
+        assert rlen is not None, \
+            f"({op}, {reduce}) needs the per-row live bound rlen"
+        assert scale is None, "precision variants are (mul, sum)-only"
+    vec = values.ndim == 4
+    if vec:
+        assert values.shape[-1] == n_b, \
+            f"vector edge features need d_e == n_b, got {values.shape[-1]}"
     n_block, p = plan.n_block, plan.p
     if n_b % n_block:
         pad = p * n_block - n_b
         b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        if vec:
+            values = jnp.pad(values, ((0, 0), (0, 0), (0, 0), (0, pad)))
 
+    val_spec = (
+        pl.BlockSpec((1, m_pad, k_pad, n_block), lambda i, j: (i, 0, 0, j))
+        if vec else
+        pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)))
     in_specs = [
         pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
-        pl.BlockSpec((1, m_pad, k_pad), lambda i, j: (i, 0, 0)),
+        val_spec,
         pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
     ]
     operands = [col_ids, values, b]
+    if rlen is not None:
+        in_specs.insert(0, pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)))
+        operands.insert(0, rlen.astype(jnp.int32))
     if scale is not None:
         in_specs.insert(0, pl.BlockSpec((1,), lambda i, j: (i,),
                                         memory_space=pltpu.SMEM))
         operands.insert(0, scale.astype(jnp.float32))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, k_pad=k_pad, has_scale=scale is not None),
+        functools.partial(_kernel, k_pad=k_pad, has_scale=scale is not None,
+                          has_rlen=rlen is not None, op=op, reduce=reduce),
         grid=(batch, p),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),

@@ -16,8 +16,9 @@ case). The TPU formulation:
   stacked (E, K, N) weight array.
 
 ``ops-level`` helpers (`sort_by_group` / `unsort`) build the sorted layout
-from top-k router output; `grouped_matmul` is differentiable via the sorted
-layout (gathers).
+from top-k router output; `grouped_matmul` carries a custom VJP (transposed
+ragged matmul for dx, one-hot-grouped einsum for dw), so it trains — the
+R-GCN layer (`repro.models.gnn`) differentiates through it per step.
 """
 from __future__ import annotations
 
@@ -46,10 +47,18 @@ def _kernel(x_ref, w_ref, gid_ref, out_ref, *, tm: int, max_groups_per_tile: int
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _row_groups(group_sizes: jax.Array, m: int, e: int) -> jax.Array:
+    """Per-row group id from ragged sizes (rows past the last boundary clamp
+    to group ``e - 1``, matching the forward kernel)."""
+    starts = jnp.cumsum(group_sizes)
+    row_group = jnp.searchsorted(starts, jnp.arange(m), side="right")
+    return jnp.minimum(row_group, e - 1).astype(jnp.int32)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("tm", "tn", "max_groups_per_tile",
                                     "interpret"))
-def grouped_matmul(
+def _gmm(
     x: jax.Array,          # (M, K) rows sorted by group
     w: jax.Array,          # (E, K, N) stacked group weights
     group_sizes: jax.Array,  # (E,) int32, sum ≤ M (padding rows → group E-1+)
@@ -59,11 +68,6 @@ def grouped_matmul(
     max_groups_per_tile: int = 4,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """out[i] = x[i] @ w[group_of(i)] with rows pre-sorted by group.
-
-    ``max_groups_per_tile`` bounds how many group boundaries may cross one
-    row tile (static unroll); with capacity-style dispatch sizes it is ≤ 2.
-    """
     from repro.kernels import resolve_interpret
     interpret = resolve_interpret(interpret)
     m, k = x.shape
@@ -72,10 +76,8 @@ def grouped_matmul(
     np_ = -(-n // tn) * tn
     xp = jnp.pad(x, ((0, mp - m), (0, 0)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, np_ - n)))
-    # per-row group id from sizes (padding rows get group e → masked to 0 out)
-    starts = jnp.cumsum(group_sizes)
-    row_group = jnp.searchsorted(starts, jnp.arange(mp), side="right")
-    row_group = jnp.minimum(row_group, e - 1).astype(jnp.int32)
+    # per-row group id from sizes (rows past the last boundary clamp to e-1)
+    row_group = _row_groups(group_sizes, mp, e)
     n_tiles_m = mp // tm
     # per-tile metadata: [first_group, row groups…]
     tile_first = row_group.reshape(n_tiles_m, tm)[:, 0]
@@ -96,6 +98,54 @@ def grouped_matmul(
         interpret=interpret,
     )(xp, wp, meta)
     return out[:m, :n]
+
+
+def grouped_matmul(
+    x: jax.Array,          # (M, K) rows sorted by group
+    w: jax.Array,          # (E, K, N) stacked group weights
+    group_sizes: jax.Array,  # (E,) int32, sum ≤ M (padding rows → group E-1+)
+    *,
+    tm: int = 128,
+    tn: int = 128,
+    max_groups_per_tile: int = 4,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """out[i] = x[i] @ w[group_of(i)] with rows pre-sorted by group.
+
+    ``max_groups_per_tile`` bounds how many group boundaries may cross one
+    row tile (static unroll); with capacity-style dispatch sizes it is ≤ 2.
+
+    Differentiable in ``x`` and ``w`` via a custom VJP (``pallas_call`` has
+    no autodiff rule): ``dx`` is the same ragged matmul against the
+    transposed weights, and ``dw[g] = Σ_{i∈g} x[i]ᵀ · dout[i]`` is a
+    one-hot-grouped einsum. Rows past ``sum(group_sizes)`` clamp to the last
+    group in BOTH directions, matching the forward kernel exactly.
+    """
+    kw = dict(tm=tm, tn=tn, max_groups_per_tile=max_groups_per_tile,
+              interpret=interpret)
+    e = w.shape[0]
+
+    # the custom_vjp is defined OUTSIDE any jit of our own (an inner jit
+    # would leak closed-over tracers); group_sizes is closed over — it is
+    # integer routing state, not a differentiable operand
+    @jax.custom_vjp
+    def f(x, w):
+        return _gmm(x, w, group_sizes, **kw)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, dout):
+        x, w = res
+        dx = _gmm(dout, w.transpose(0, 2, 1), group_sizes, **kw)
+        onehot = jax.nn.one_hot(_row_groups(group_sizes, x.shape[0], e), e,
+                                dtype=jnp.float32)
+        dw = jnp.einsum("me,mk,mn->ekn", onehot, x.astype(jnp.float32),
+                        dout.astype(jnp.float32))
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f(x, w)
 
 
 def sort_by_group(eids: jax.Array, e: int):

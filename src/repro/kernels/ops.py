@@ -2,29 +2,23 @@
 
 The app-level contract mirrors the paper's TensorFlow integration (§IV-D):
 adjacency matrices arrive as SparseTensor-style COO batches; one call executes
-the whole batch. ``impl`` selects:
-
-- ``"ref"``        pure-jnp batched oracle (scatter-add), XLA-fused;
-- ``"pallas_ell"`` Batched SWA-CSR analogue (row-split ELL Pallas kernel);
-- ``"pallas_csr"`` Batched CSR row-split (GE-SpMM style: flat nnz arrays,
-                   rpt-bounded dynamic slot loop — DESIGN.md §9);
-- ``"csr"``        pure-XLA CSR segment-sum reference (same conversion,
-                   searchsorted row recovery + scatter-add);
-- ``"pallas_coo"`` Batched SWA-SparseTensor analogue (one-hot-scatter kernel);
-- ``"dense"``      densify + batched GEMM (the cuBLAS gemmBatched baseline);
-- ``"pallas_gemm"`` densify + MXU Pallas batched GEMM;
-- ``"loop"``       the NON-batched baseline: one sequential SpMM per sample,
-                   reproducing the paper's per-sample-kernel-launch structure;
-- ``"auto"``       (default) shape-keyed adaptive dispatch: the paper's
-                   §IV-B/§IV-C resource-assignment policy extended into a
-                   which-kernel decision by ``repro.autotune`` (cost model +
-                   optional measured tuning cache — DESIGN.md §5). Resolution
-                   happens at trace time from static shapes, so it is
-                   jit-safe and free at run time.
+the whole batch. ``impl`` selects an entry from the registry table appended
+below — the table is GENERATED from :data:`IMPLS` at import time so it can
+never drift from the registry again (every registered impl must carry a
+description, asserted by tests).
 
 The VJP follows the paper's backward-pass batching: dB = batched-SpMM with Aᵀ
 (index swap — free in COO), and dValues is a batched gather-dot. Both run as
 single batched ops.
+
+g-SpMM (DESIGN.md §11): :func:`batched_gspmm` generalizes the inner
+``C[rid] += val · B[cid]`` into message passing ``C[r] = reduce(op(B[c], e))``
+with a static ``(op, reduce)`` pair — ``op ∈`` :data:`GSPMM_OPS`, ``reduce ∈``
+:data:`GSPMM_REDUCES` — and edge values that may be per-edge feature VECTORS
+``(batch, nnz_pad, d_e)``. The ``(mul, sum)`` corner with scalar edges IS
+plain batched SpMM and delegates to :func:`batched_spmm` (full registry,
+precision variants included); every other corner runs the f32 g-SpMM-capable
+subset (``autotune.GSPMM_IMPLS``) with explicit padding masks.
 """
 from __future__ import annotations
 
@@ -33,7 +27,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.autotune.cost_model import PRECISION_IMPLS, precision_of
+from repro.autotune.cost_model import (
+    GSPMM_IMPLS,
+    PRECISION_IMPLS,
+    precision_of,
+    supports_gspmm,
+)
 from repro.core import batching
 from repro.core.formats import (
     BatchedCOO,
@@ -43,6 +42,7 @@ from repro.core.formats import (
     coo_to_ell,
     narrow_col_ids,
     quantize_values_i8,
+    row_degrees,
     validate_ell_k_pad,
 )
 from repro.kernels import ref, resolve_interpret
@@ -61,6 +61,56 @@ from repro.kernels.batched_spmm_ell import batched_spmm_ell
 IMPLS = ("auto", "ref", "ell", "pallas_ell", "csr", "pallas_csr",
          "pallas_coo", "dense", "pallas_gemm", "loop",
          "fused") + tuple(PRECISION_IMPLS)
+
+# The static g-SpMM axes (DESIGN.md §11). ``copy_lhs`` ignores the edge
+# value entirely (pure neighborhood aggregation, e.g. R-GCN's mean).
+GSPMM_OPS = ("mul", "add", "copy_lhs")
+GSPMM_REDUCES = ("sum", "max", "mean")
+
+# One description per BASE impl; precision variants derive theirs from
+# (base, policy) so adding a variant never needs a new entry here.
+_IMPL_NOTES = {
+    "auto": "shape-keyed adaptive dispatch: the paper's §IV-B/§IV-C "
+            "resource-assignment policy extended into a which-kernel "
+            "decision by repro.autotune (cost model + optional measured "
+            "tuning cache, DESIGN.md §5); trace-time, jit-safe",
+    "ref": "pure-jnp batched oracle (scatter-add), XLA-fused",
+    "ell": "pure-XLA ELL row-split (gather + contraction): the batched "
+           "single-op semantics without the Pallas kernel",
+    "pallas_ell": "Batched SWA-CSR analogue (row-split ELL Pallas kernel)",
+    "csr": "pure-XLA CSR segment-sum reference (same conversion, "
+           "searchsorted row recovery + scatter-add)",
+    "pallas_csr": "Batched CSR row-split (GE-SpMM style: flat nnz arrays, "
+                  "rpt-bounded dynamic slot loop — DESIGN.md §9)",
+    "pallas_coo": "Batched SWA-SparseTensor analogue (one-hot-scatter "
+                  "kernel)",
+    "dense": "densify + batched GEMM (the cuBLAS gemmBatched baseline)",
+    "pallas_gemm": "densify + MXU Pallas batched GEMM",
+    "loop": "the NON-batched baseline: one sequential SpMM per sample, "
+            "reproducing the paper's per-sample-kernel-launch structure",
+    "fused": "graph-conv LAYER megakernel (needs W and bias; raises here — "
+             "use graph_conv_batched, DESIGN.md §7)",
+}
+_POLICY_NOTES = {
+    "bf16": "bfloat16 storage, f32 in-kernel accumulate (DESIGN.md §10)",
+    "i8": "int8 value codes + per-matrix f32 dequantization scale "
+          "(DESIGN.md §10)",
+}
+
+
+def _impl_table() -> str:
+    """Render the registry table appended to this module's docstring —
+    derived from :data:`IMPLS` so docs cannot drift from the registry."""
+    lines = []
+    for name in IMPLS:
+        base, policy = precision_of(name)
+        note = (_IMPL_NOTES[base] if policy == "f32"
+                else f"{base!r} execution with {_POLICY_NOTES[policy]}")
+        lines.append(f"- ``{name!r}``: {note}")
+    return "Registered ``impl`` values:\n\n" + "\n".join(lines)
+
+
+__doc__ = (__doc__ or "") + "\n" + _impl_table() + "\n"
 
 
 def resolve_impl(
@@ -129,7 +179,8 @@ def _csr_forward(csr: BatchedCSR, b, *, impl, interpret, scale=None,
                             plan=plan, scale=scale, interpret=interpret)
 
 
-def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
+def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret,
+             op="mul", reduce="sum"):
     """Dispatch one batched SpMM forward. A precision variant (DESIGN.md §10)
     decomposes into (base impl, storage policy): bf16 casts values and the
     dense operand to bfloat16 (f32 accumulate in-kernel, output cast back to
@@ -137,7 +188,20 @@ def _forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad, interpret):
     f32 scale applied once to the accumulator (exact, by linearity) while the
     dense operand stays full-precision. Both narrow the Pallas-side index
     storage to int16 behind :func:`repro.core.formats.narrow_col_ids`'s
-    host-side overflow guard."""
+    host-side overflow guard.
+
+    A non-default ``(op, reduce)`` or 3D (vector-edge) ``values`` routes to
+    the g-SpMM dispatch (:func:`_gspmm_forward`): f32-only, explicit padding
+    masks, restricted to ``autotune.GSPMM_IMPLS``."""
+    if (op, reduce) != ("mul", "sum") or values.ndim == 3:
+        if not supports_gspmm(impl):
+            raise ValueError(
+                f"impl {impl!r} cannot run g-SpMM (op={op!r}, "
+                f"reduce={reduce!r}, values.ndim={values.ndim}); the capable "
+                f"set is {GSPMM_IMPLS} at f32")
+        return _gspmm_forward(row_ids, col_ids, nnz, values, b,
+                              impl=precision_of(impl)[0], k_pad=k_pad,
+                              interpret=interpret, op=op, reduce=reduce)
     base, policy = precision_of(impl)
     out_dtype = b.dtype
     scale = None
@@ -229,6 +293,76 @@ def _forward_base(row_ids, col_ids, nnz, values, b, *, impl, base, k_pad,
     raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
 
 
+def _gspmm_forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad,
+                   interpret, op, reduce):
+    """Dispatch one batched g-SpMM forward over the capable impl subset.
+
+    Every path masks padding EXPLICITLY from the true per-matrix ``nnz`` /
+    per-row degree: the §IV-C padding invariant (value 0.0 is neutral) only
+    holds for ``(mul, sum)``. The paper's case-3 guard falls back to the
+    batched pure-jnp oracle, like the plain-SpMM branches."""
+    batch, m_pad, n_b = b.shape
+    a = BatchedCOO(row_ids, col_ids, values, nnz, jnp.full((batch,), m_pad))
+    if impl == "ref":
+        return ref.batched_gspmm_ref(a, b, m_pad, op=op, reduce=reduce)
+    if impl == "loop":
+        # Non-batched baseline: sequential per-sample g-SpMM (scan), the
+        # per-sample-kernel-launch structure of the paper's "TF" bars.
+        def step(_, args):
+            r, c, v, n, bb = args
+            return None, ref.gspmm_coo_single(r, c, v, bb, m_pad, n,
+                                              op=op, reduce=reduce)
+
+        _, out = jax.lax.scan(step, None, (row_ids, col_ids, values, nnz, b))
+        return out
+
+    def fallback():
+        return ref.batched_gspmm_ref(a, b, m_pad, op=op, reduce=reduce)
+
+    if impl in ("csr", "pallas_csr"):
+        csr = coo_to_csr(a, m_pad)
+        if impl == "csr":
+            return ref.batched_gspmm_csr_ref(csr, b, op=op, reduce=reduce)
+        plan = batching.plan_batched_spmm(
+            batch=batch, m_pad=m_pad, n_b=n_b, slots=csr.nnz_pad,
+            itemsize=b.dtype.itemsize)
+        if plan.case == 3:
+            return fallback()
+        return batched_spmm_csr(csr.rpt, csr.col_ids, csr.values, b,
+                                plan=plan, op=op, reduce=reduce,
+                                interpret=interpret)
+    if impl in ("ell", "pallas_ell"):
+        if k_pad is None:
+            raise ValueError(f"{impl} requires k_pad (max nnz/row)")
+        validate_ell_k_pad(a, m_pad, k_pad)
+        # the ELL layout cannot distinguish a real zero-valued edge from a
+        # padded slot, so the per-row live bound travels beside it
+        rlen = row_degrees(a, m_pad)
+        ell = coo_to_ell(a, m_pad, k_pad)
+        if impl == "ell":
+            return ref.batched_gspmm_ell_ref(ell, rlen, b,
+                                             op=op, reduce=reduce)
+        plan = batching.plan_batched_spmm(
+            batch=batch, m_pad=m_pad, n_b=n_b, slots=k_pad,
+            itemsize=b.dtype.itemsize)
+        if plan.case == 3:
+            return fallback()
+        return batched_spmm_ell(ell.col_ids, ell.values, b, plan=plan,
+                                rlen=rlen, op=op, reduce=reduce,
+                                interpret=interpret)
+    if impl == "pallas_coo":
+        plan = batching.plan_batched_spmm(
+            batch=batch, m_pad=m_pad, n_b=n_b, slots=row_ids.shape[1],
+            itemsize=b.dtype.itemsize)
+        if plan.case == 3:
+            return fallback()
+        return batched_spmm_coo(row_ids, col_ids, values, b, plan=plan,
+                                nnz=nnz, op=op, reduce=reduce,
+                                interpret=interpret)
+    raise ValueError(
+        f"unknown g-SpMM impl {impl!r}; expected one of {GSPMM_IMPLS}")
+
+
 _VARIANT_BWD = {
     # bf16 forwards keep a bf16-class backward (grads accumulate f32
     # in-kernel, cast on the way out); ELL-class forwards fall to the COO
@@ -290,6 +424,193 @@ def dvalues(row_ids, col_ids, dc, b):
             jnp.take(dcc, rid, axis=0) * jnp.take(bb, cid, axis=0), axis=-1)
 
     return jax.vmap(one)(row_ids, col_ids, dc, b)
+
+
+def gspmm_backward(row_ids, col_ids, nnz, values, b, c, dc, *, op, reduce,
+                   impl, interpret):
+    """(dValues, dB) for one g-SpMM forward — shared by the local and the
+    mesh-sharded VJP, like :func:`backward_db`/:func:`dvalues` for plain
+    SpMM.
+
+    ``mean`` pre-scales the cotangent by 1/deg (d mean = d sum / deg) and
+    then reduces to the sum backward. The ``(mul, sum/mean)`` scalar-edge
+    corner IS the plain-SpMM backward and keeps its in-class batched path
+    (dB = Aᵀ @ dC via :func:`backward_db`, dValues a batched gather-dot —
+    only the padding-slot gradient needs an explicit mask now). Every other
+    corner runs a generic gather/scatter VJP:
+
+    - ``max`` routes each row's cotangent to the winning edge(s) by an
+      argmax mask ``msg == C[rid]`` — exact f32 equality is sound because
+      the forward computes ``msg`` with the identical f32 expression; ties
+      (e.g. duplicate edges under ``copy_lhs``) split the cotangent evenly,
+      matching XLA's scatter-max autodiff convention;
+    - dB scatters ``∂msg/∂B = e`` (mul) or ``1`` (add / copy_lhs) by column;
+    - dValues is the feature-summed (scalar) or elementwise (vector) product
+      with the gathered B rows for ``mul``, the bare cotangent for ``add``,
+      and identically 0 for ``copy_lhs``.
+    """
+    batch, m_pad, _ = b.shape
+    nnz_pad = row_ids.shape[1]
+    valid = jnp.arange(nnz_pad)[None, :] < nnz[:, None]    # (batch, nnz_pad)
+    dcf = dc.astype(jnp.float32)
+    if reduce == "mean":
+        a = BatchedCOO(row_ids, col_ids, values, nnz,
+                       jnp.full((batch,), m_pad))
+        deg = row_degrees(a, m_pad).astype(jnp.float32)    # (batch, m_pad)
+        dcf = dcf / jnp.maximum(deg, 1.0)[..., None]
+    scalar = values.ndim == 2
+    if op == "mul" and reduce in ("sum", "mean") and scalar:
+        # padded slots carry no semantics here (dB is linear in the values),
+        # so zero them instead of trusting the padding-is-0.0 invariant
+        vals_m = values * valid.astype(values.dtype)
+        db = backward_db(row_ids, col_ids, nnz, vals_m, dcf,
+                         impl=impl, interpret=interpret)
+        dval = dvalues(row_ids, col_ids, dcf, b) * valid
+        return dval.astype(values.dtype), db.astype(b.dtype)
+
+    def one(rid, cid, val, n, bf, cf, dcc):
+        vmask = (jnp.arange(nnz_pad) < n)[:, None]         # (nnz_pad, 1)
+        rid_c = jnp.clip(rid.astype(jnp.int32), 0, m_pad - 1)
+        cid_c = cid.astype(jnp.int32)
+        u = jnp.take(bf, cid_c, axis=0).astype(jnp.float32)
+        dmsg = jnp.take(dcc, rid_c, axis=0)
+        if reduce == "max":
+            msg = ref.gspmm_combine(u, val, op)
+            win = ((msg == jnp.take(cf, rid_c, axis=0)) & vmask).astype(
+                jnp.float32)
+            # ties (e.g. duplicate edges under copy_lhs) split the cotangent
+            # evenly — XLA's scatter-max autodiff convention
+            nwin = jnp.zeros(cf.shape, jnp.float32).at[rid_c].add(win)
+            dmsg = win * dmsg / jnp.maximum(
+                jnp.take(nwin, rid_c, axis=0), 1.0)
+        else:
+            dmsg = jnp.where(vmask, dmsg, 0.0)
+        if op == "mul":
+            e = val.astype(jnp.float32)
+            if scalar:
+                e = e[:, None]
+            db = jnp.zeros(bf.shape, jnp.float32).at[cid_c].add(dmsg * e)
+            dval = jnp.sum(dmsg * u, axis=-1) if scalar else dmsg * u
+        elif op == "add":
+            db = jnp.zeros(bf.shape, jnp.float32).at[cid_c].add(dmsg)
+            dval = jnp.sum(dmsg, axis=-1) if scalar else dmsg
+        else:   # copy_lhs: the edge value never enters the forward
+            db = jnp.zeros(bf.shape, jnp.float32).at[cid_c].add(dmsg)
+            dval = jnp.zeros(val.shape, jnp.float32)
+        return dval, db
+
+    # only the max backward consults the forward output (argmax routing);
+    # the linear reduces pass a placeholder so the residual can drop `c`
+    cf = c.astype(jnp.float32) if reduce == "max" else jnp.zeros_like(dcf)
+    dval, db = jax.vmap(one)(row_ids, col_ids, values, nnz, b, cf, dcf)
+    return dval.astype(values.dtype), db.astype(b.dtype)
+
+
+def resolve_gspmm_impl(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    op: str = "mul",
+    reduce: str = "sum",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+):
+    """Resolve ``impl="auto"`` for one g-SpMM call — the
+    :func:`resolve_impl` analogue with the ``(op, reduce, d_e)`` workload
+    axes set, so ``Workload.is_gspmm`` restricts the ranked ladder to the
+    capable subset and the tuning-cache key never collides with the plain
+    SpMM entry for the same shapes."""
+    from repro import autotune
+
+    interpret = resolve_interpret(interpret)
+    batch, m_pad, n_b = b.shape
+    d_e = a.values.shape[2] if a.values.ndim == 3 else None
+    w = autotune.Workload(batch=batch, m_pad=m_pad,
+                          nnz_pad=a.row_ids.shape[1], k_pad=k_pad, n_b=n_b,
+                          itemsize=b.dtype.itemsize, d_e=d_e, reduce=reduce,
+                          op=op)
+    if impl != "auto":
+        return autotune.forced_decision(w, impl)
+    from repro.autotune.cache import default_cache
+    return autotune.select_impl(w, allow_pallas=not interpret,
+                                cache=default_cache())
+
+
+def batched_gspmm(
+    a: BatchedCOO,
+    b: jax.Array,
+    *,
+    op: str = "mul",
+    reduce: str = "sum",
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+    mesh=None,
+    mesh_axis: str = "data",
+) -> jax.Array:
+    """Generalized SpMM / message passing: per sample s,
+    ``C[s][r] = reduce_{edges (r, c)} op(B[s][c], e)`` — the g-SpMM of
+    DESIGN.md §11 (DGL's gspmm shape, arXiv:1909.01315).
+
+    ``a.values`` holds the edge values ``e``: scalars ``(batch, nnz_pad)``
+    or per-edge feature vectors ``(batch, nnz_pad, d_e)`` with ``d_e`` equal
+    to B's feature width. Differentiable in ``a.values`` and ``b`` (custom
+    VJP; ``max`` keeps its argmax routing, ``mean`` its degree scaling,
+    zero-degree rows emit the 0.0 identity with 0 gradient).
+
+    ``(op, reduce) == ("mul", "sum")`` with scalar edges IS plain batched
+    SpMM and delegates to :func:`batched_spmm` — full registry, precision
+    variants, identical numerics. Every other corner resolves over the
+    f32 g-SpMM-capable subset (``autotune.GSPMM_IMPLS``).
+    """
+    if op not in GSPMM_OPS:
+        raise ValueError(f"unknown g-SpMM op {op!r}; expected {GSPMM_OPS}")
+    if reduce not in GSPMM_REDUCES:
+        raise ValueError(
+            f"unknown g-SpMM reduce {reduce!r}; expected {GSPMM_REDUCES}")
+    if (op, reduce) == ("mul", "sum") and a.values.ndim == 2:
+        return batched_spmm(a, b, impl=impl, k_pad=k_pad,
+                            interpret=interpret, mesh=mesh,
+                            mesh_axis=mesh_axis)
+    interpret = resolve_interpret(interpret)
+    if mesh is not None:
+        from repro.distributed.spmm import sharded_batched_gspmm
+
+        return sharded_batched_gspmm(a, b, op=op, reduce=reduce,
+                                     mesh=mesh, axis=mesh_axis, impl=impl,
+                                     k_pad=k_pad, interpret=interpret)
+    if impl == "auto":
+        impl = resolve_gspmm_impl(a, b, op=op, reduce=reduce, k_pad=k_pad,
+                                  interpret=interpret).impl
+    if not supports_gspmm(impl):
+        raise ValueError(
+            f"impl {impl!r} cannot run g-SpMM (op={op!r}, reduce={reduce!r});"
+            f" the capable set is {GSPMM_IMPLS} at f32")
+
+    row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
+
+    @jax.custom_vjp
+    def f(values, b):
+        return _forward(row_ids, col_ids, nnz, values, b, impl=impl,
+                        k_pad=k_pad, interpret=interpret, op=op,
+                        reduce=reduce)
+
+    def fwd(values, b):
+        c = f(values, b)
+        # the argmax routing of the max backward needs the forward output;
+        # the linear reduces don't — drop it from their residual
+        return c, (values, b, c if reduce == "max" else None)
+
+    def bwd(res, dc):
+        values, b, c = res
+        dval, db = gspmm_backward(row_ids, col_ids, nnz, values, b, c, dc,
+                                  op=op, reduce=reduce, impl=impl,
+                                  interpret=interpret)
+        return dval, db
+
+    f.defvjp(fwd, bwd)
+    return f(a.values, b)
 
 
 def batched_spmm(

@@ -88,6 +88,143 @@ def batched_spmm_csr_ref(a: BatchedCSR, b: jax.Array) -> jax.Array:
     return jax.vmap(one)(a.rpt, a.col_ids, a.values, b)
 
 
+# ---------------------------------------------------------------------------
+# Generalized message passing (g-SpMM): C[r] = reduce_{(r,c) ∈ E} op(B[c], e)
+# ---------------------------------------------------------------------------
+
+# Finite stand-in for -inf in the max-reduce accumulators: -inf would make
+# the `where` fix-up of empty rows produce inf-inf NaNs under autodiff.
+NEG_INF = -3.0e38
+
+
+def gspmm_combine(u: jax.Array, e: jax.Array | None, op: str) -> jax.Array:
+    """The per-edge combine ``op(u, e)``: ``u`` is the gathered B row(s),
+    ``e`` the edge value — a scalar broadcast over features or a d_e == n_b
+    feature vector. ``copy_lhs`` ignores ``e`` entirely."""
+    if op == "copy_lhs":
+        return u
+    ef = e.astype(jnp.float32)
+    if ef.ndim < u.ndim:
+        ef = ef[..., None]
+    if op == "mul":
+        return u * ef
+    if op == "add":
+        return u + ef
+    raise ValueError(f"unknown g-SpMM op {op!r}")
+
+
+def gspmm_coo_single(
+    row_ids: jax.Array,
+    col_ids: jax.Array,
+    values: jax.Array,    # (nnz_pad,) scalar or (nnz_pad, d_e) vector edges
+    b: jax.Array,
+    m_out: int,
+    nnz: jax.Array,
+    *,
+    op: str = "mul",
+    reduce: str = "sum",
+) -> jax.Array:
+    """Single-sample g-SpMM, the differentiable ground truth.
+
+    Unlike :func:`spmm_coo_single`, padding is masked EXPLICITLY from
+    ``nnz``: the §IV-C padding invariant (value 0.0 contributes nothing)
+    only neutralizes the ``(mul, sum)`` corner — an ``add``/``copy_lhs``
+    combine or a ``max``/``mean`` reduce would see phantom edges at row 0.
+    Zero-degree rows take the identity 0.0 for every reduce (``max`` runs on
+    a finite -inf stand-in then rewrites empty rows; ``mean`` guards the
+    0/0 with a degree clamp)."""
+    nnz_pad = row_ids.shape[0]
+    valid = jnp.arange(nnz_pad) < nnz
+    u = b[col_ids].astype(jnp.float32)                 # (nnz_pad, n_b)
+    msg = gspmm_combine(u, values, op)
+    if reduce in ("sum", "mean"):
+        msg = jnp.where(valid[:, None], msg, 0.0)
+        out = jnp.zeros((m_out, b.shape[-1]), jnp.float32).at[row_ids].add(msg)
+        if reduce == "mean":
+            deg = jnp.zeros((m_out,), jnp.float32).at[row_ids].add(
+                valid.astype(jnp.float32))
+            out = out / jnp.maximum(deg, 1.0)[:, None]
+        return out.astype(b.dtype)
+    if reduce != "max":
+        raise ValueError(f"unknown g-SpMM reduce {reduce!r}")
+    # max: park invalid slots on an overflow row so their NEG_INF sentinel
+    # never competes, then rewrite empty rows to the 0.0 identity
+    msg = jnp.where(valid[:, None], msg, NEG_INF)
+    rid_eff = jnp.where(valid, row_ids, m_out)
+    out = jnp.full((m_out + 1, b.shape[-1]), NEG_INF, jnp.float32)
+    out = out.at[rid_eff].max(msg)[:m_out]
+    deg = jnp.zeros((m_out + 1,), jnp.float32).at[rid_eff].add(
+        valid.astype(jnp.float32))[:m_out]
+    return jnp.where(deg[:, None] > 0, out, 0.0).astype(b.dtype)
+
+
+def batched_gspmm_ref(a: BatchedCOO, b: jax.Array, m_out: int, *,
+                      op: str = "mul", reduce: str = "sum") -> jax.Array:
+    """Batched pure-jnp g-SpMM oracle: vmap of :func:`gspmm_coo_single`.
+    Differentiable in ``a.values`` and ``b`` — the autodiff grads of THIS
+    function are the ground truth the custom-VJP backwards are tested
+    against (tests/oracle.py)."""
+    return jax.vmap(
+        lambda r, c, v, bb, n: gspmm_coo_single(r, c, v, bb, m_out, n,
+                                                op=op, reduce=reduce)
+    )(a.row_ids, a.col_ids, a.values, b, a.nnz)
+
+
+def batched_gspmm_ell_ref(a: BatchedELL, rlen: jax.Array, b: jax.Array, *,
+                          op: str = "mul", reduce: str = "sum") -> jax.Array:
+    """XLA row-split g-SpMM over the ELL layout: the Pallas ELL kernel's
+    semantics (masked slot loop, per-row live bound ``rlen``) as one gather
+    + masked reduce over the slot axis."""
+
+    def one(cid, val, rl, bb):
+        m_pad, k_pad = cid.shape
+        u = bb[cid].astype(jnp.float32)               # (m_pad, k_pad, n_b)
+        msg = gspmm_combine(u, val, op)
+        live = (jnp.arange(k_pad)[None, :] < rl[:, None])[..., None]
+        if reduce in ("sum", "mean"):
+            out = jnp.sum(jnp.where(live, msg, 0.0), axis=1)
+            if reduce == "mean":
+                out = out / jnp.maximum(rl, 1).astype(jnp.float32)[:, None]
+        else:
+            out = jnp.max(jnp.where(live, msg, NEG_INF), axis=1)
+            out = jnp.where((rl > 0)[:, None], out, 0.0)
+        return out.astype(bb.dtype)
+
+    return jax.vmap(one)(a.col_ids, a.values, rlen, b)
+
+
+def batched_gspmm_csr_ref(a: BatchedCSR, b: jax.Array, *,
+                          op: str = "mul", reduce: str = "sum") -> jax.Array:
+    """XLA CSR g-SpMM: searchsorted row recovery + masked segment reduce —
+    the segment-sum reference of :func:`batched_spmm_csr_ref` generalized to
+    the op × reduce matrix."""
+
+    def one(rpt, cid, val, bb):
+        m_pad = rpt.shape[0] - 1
+        nnz_pad = cid.shape[0]
+        slot = jnp.arange(nnz_pad)
+        rid = jnp.clip(jnp.searchsorted(rpt, slot, side="right") - 1,
+                       0, m_pad - 1)
+        valid = slot < rpt[-1]
+        u = bb[cid].astype(jnp.float32)
+        msg = gspmm_combine(u, val, op)
+        deg = (rpt[1:] - rpt[:-1]).astype(jnp.float32)
+        if reduce in ("sum", "mean"):
+            msg = jnp.where(valid[:, None], msg, 0.0)
+            out = jnp.zeros((m_pad, bb.shape[-1]), jnp.float32).at[rid].add(
+                msg)
+            if reduce == "mean":
+                out = out / jnp.maximum(deg, 1.0)[:, None]
+        else:
+            msg = jnp.where(valid[:, None], msg, NEG_INF)
+            out = jnp.full((m_pad, bb.shape[-1]), NEG_INF,
+                           jnp.float32).at[rid].max(msg)
+            out = jnp.where(deg[:, None] > 0, out, 0.0)
+        return out.astype(bb.dtype)
+
+    return jax.vmap(one)(a.rpt, a.col_ids, a.values, b)
+
+
 def batched_gemm_ref(a_dense: jax.Array, b: jax.Array) -> jax.Array:
     """cuBLAS gemmBatched analogue: (batch, m, k) @ (batch, k, n)."""
     return jax.lax.batch_matmul(

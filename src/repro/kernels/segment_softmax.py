@@ -1,0 +1,94 @@
+"""Per-row (segment) softmax over edge scores — the attention building block
+(DESIGN.md §11).
+
+``alpha[i] = exp(s[i] - max_row(s)) / Σ_{j: rid[j] = rid[i]} exp(s[j] - …)``
+for every valid edge slot ``i``, where the segments are the destination rows
+``row_ids`` of a :class:`~repro.core.formats.BatchedCOO` batch. This is the
+GAT normalizer: scores live on edges, the softmax runs over each row's
+incoming edges.
+
+Numerics and identities:
+
+- per-row max subtraction (scatter-max) keeps the exponentials in range; the
+  shifted argument is masked to 0 before ``exp`` so no inf is ever
+  materialized, even transiently;
+- padded slots (``i ≥ nnz``) output exactly 0 and receive exactly 0
+  gradient;
+- zero-degree rows have no valid slots, so nothing is emitted for them —
+  their (non-existent) weights are all-zero and the backward stays finite
+  (the 0/0 is guarded by a denominator clamp, and the custom VJP is
+  identically 0 there).
+
+The custom VJP is the classic softmax Jacobian restricted to segments:
+``ds[i] = alpha[i] · (g[i] - t[rid[i]])`` with ``t[r] = Σ_j alpha[j]·g[j]``
+over row r — two scatter-adds, no materialized (nnz × nnz) Jacobian.
+
+Scores may be ``(batch, nnz_pad)`` or multi-head ``(batch, nnz_pad, h)``;
+the softmax is independent per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3.0e38   # finite stand-in for -inf (matches kernels/ref.py)
+
+
+def _forward(scores, row_ids, nnz, m_pad):
+    """Batched segment softmax on (batch, nnz_pad, h) scores; returns the
+    weights in the scores' shape (all-f32 internally)."""
+
+    def one(s, rid, n):
+        nnz_pad, h = s.shape
+        valid = (jnp.arange(nnz_pad) < n)[:, None]
+        rid_c = jnp.clip(rid, 0, m_pad - 1)
+        sf = s.astype(jnp.float32)
+        smax = jnp.full((m_pad, h), NEG_INF, jnp.float32).at[rid_c].max(
+            jnp.where(valid, sf, NEG_INF))
+        # mask BEFORE exp: s - NEG_INF on an all-padding row would overflow
+        shifted = jnp.where(valid, sf - smax[rid_c], 0.0)
+        z = jnp.where(valid, jnp.exp(shifted), 0.0)
+        denom = jnp.zeros((m_pad, h), jnp.float32).at[rid_c].add(z)
+        return z / jnp.maximum(denom[rid_c], 1e-30)
+
+    return jax.vmap(one)(scores, row_ids, nnz)
+
+
+# NOT jitted at this level: the custom_vjp closes over row_ids/nnz, and a
+# surrounding jit would capture them as leaked tracers in the VJP closure —
+# same posture as ops.batched_spmm. Callers jit the enclosing layer/loss.
+def segment_softmax(
+    scores: jax.Array,    # (batch, nnz_pad) or (batch, nnz_pad, h)
+    row_ids: jax.Array,   # (batch, nnz_pad) int32 — the segment ids
+    *,
+    nnz: jax.Array,       # (batch,) int32 — true edge count per sample
+    m_pad: int,
+) -> jax.Array:
+    """Numerically stable softmax of ``scores`` over each destination row's
+    incoming edges. Differentiable in ``scores`` (custom VJP)."""
+    squeeze = scores.ndim == 2
+    s3 = scores[..., None] if squeeze else scores
+
+    @jax.custom_vjp
+    def f(s):
+        return _forward(s, row_ids, nnz, m_pad)
+
+    def fwd(s):
+        out = f(s)
+        return out, out
+
+    def bwd(out, g):
+        gf = g.astype(jnp.float32)
+
+        def one(o, gg, rid):
+            rid_c = jnp.clip(rid, 0, m_pad - 1)
+            # t[r] = Σ_{j in row r} alpha[j]·g[j]; invalid slots have o = 0
+            t = jnp.zeros((m_pad, o.shape[-1]), jnp.float32).at[rid_c].add(
+                o * gg)
+            return o * (gg - t[rid_c])
+
+        return (jax.vmap(one)(out, gf, row_ids),)
+
+    f.defvjp(fwd, bwd)
+    out = f(s3).astype(scores.dtype)
+    return out[..., 0] if squeeze else out

@@ -1,1 +1,11 @@
-"""Assigned-architecture model zoo (pure-functional JAX, scan-over-layers)."""
+"""Assigned-architecture model zoo (pure-functional JAX, scan-over-layers).
+
+``repro.models.gnn`` holds the g-SpMM-backed graph layers (GAT, R-GCN) built
+on :mod:`repro.core.message_passing` (DESIGN.md §11).
+"""
+from repro.models.gnn import (  # noqa: F401
+    gat_layer,
+    init_gat_layer,
+    init_rgcn_layer,
+    rgcn_layer,
+)

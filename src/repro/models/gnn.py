@@ -1,0 +1,172 @@
+"""GNN layer zoo on top of the g-SpMM message-passing primitive
+(DESIGN.md §11).
+
+Both layers keep the paper's batched execution discipline — a handful of
+batched device ops per layer for the WHOLE mini-batch, never a per-sample or
+per-head loop:
+
+- ``gat_layer``  (Graph Attention, arXiv:1710.10903): the per-head feature
+  transform is one einsum; per-edge attention logits are two gathers over
+  node-level projections; the softmax over each destination row's incoming
+  edges is :func:`repro.kernels.segment_softmax.segment_softmax`; and the
+  attention-weighted aggregation of EVERY head is ONE vector-edge
+  ``(mul, sum)`` g-SpMM with the head axis flattened into the batch axis —
+  the attention weights are the edge-feature vectors.
+- ``rgcn_layer`` (Relational GCN, arXiv:1703.06103): the per-relation weight
+  transforms run as ONE ragged :func:`repro.kernels.grouped_matmul` over
+  relation-major tokens (the MoE idiom of DESIGN.md §4 — relations are the
+  groups), and the degree-normalized neighborhood aggregation of every
+  relation is ONE ``(copy_lhs, mean)`` g-SpMM over the relation-flattened
+  batch.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BatchedCOO
+from repro.core.graph_conv import flatten_channels
+from repro.core.message_passing import message_passing
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.segment_softmax import segment_softmax
+
+
+def init_gat_layer(key, n_in: int, n_out: int, heads: int):
+    """Multi-head GAT parameters: per-head transform ``w`` to ``n_out //
+    heads`` features, split attention vectors ``a_src``/``a_dst`` (the
+    concatenation trick: a·[h_i ‖ h_j] = a_src·h_j + a_dst·h_i), and an
+    output bias over the concatenated heads."""
+    if n_out % heads:
+        raise ValueError(f"n_out={n_out} not divisible by heads={heads}")
+    d_head = n_out // heads
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = 1.0 / jnp.sqrt(n_in)
+    return {
+        "w": jax.random.uniform(k1, (heads, n_in, d_head), jnp.float32,
+                                -scale, scale),
+        "a_src": jax.random.uniform(k2, (heads, d_head), jnp.float32,
+                                    -scale, scale),
+        "a_dst": jax.random.uniform(k3, (heads, d_head), jnp.float32,
+                                    -scale, scale),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def gat_layer(
+    params,
+    adj: BatchedCOO,             # connectivity; edge values are ignored
+    x: jax.Array,                # (batch, m_pad, n_in)
+    *,
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+    mesh=None,
+    negative_slope: float = 0.2,
+) -> jax.Array:
+    """One multi-head graph-attention layer → ``(batch, m_pad, n_out)`` with
+    the heads' outputs concatenated.
+
+    ``alpha = segment_softmax(LeakyReLU(a_src·h[cid] + a_dst·h[rid]))`` per
+    head over each destination row's incoming edges, then the aggregation
+    ``out[r] = Σ_edges alpha · h[cid]`` for ALL heads runs as ONE
+    ``(mul, sum)`` g-SpMM: heads flatten into the batch axis (head-major)
+    and the per-edge ``alpha`` broadcasts across the head width as a
+    vector edge feature. Zero-degree rows get all-zero attention rows from
+    ``segment_softmax`` and therefore the 0.0 identity output with finite
+    (zero) gradients — no NaN from the empty softmax.
+    """
+    heads, _, d_head = params["w"].shape
+    batch, m_pad, _ = x.shape
+    nnz_pad = adj.row_ids.shape[1]
+
+    h = jnp.einsum("bmn,hnf->hbmf", x, params["w"])    # (heads, b, m, d_head)
+    # node-level halves of the edge logit, then two gathers per edge
+    s_src = jnp.einsum("hbmf,hf->hbm", h, params["a_src"])
+    s_dst = jnp.einsum("hbmf,hf->hbm", h, params["a_dst"])
+    gather = jax.vmap(jax.vmap(lambda s, ids: s[ids]))  # over (heads, batch)
+    logits = (gather(s_src, jnp.broadcast_to(adj.col_ids, (heads, batch,
+                                                           nnz_pad)))
+              + gather(s_dst, jnp.broadcast_to(adj.row_ids, (heads, batch,
+                                                             nnz_pad))))
+    logits = jax.nn.leaky_relu(logits, negative_slope)
+    # per-row softmax, independent per head: (batch, nnz_pad, heads)
+    alpha = segment_softmax(logits.transpose(1, 2, 0), adj.row_ids,
+                            nnz=adj.nnz, m_pad=m_pad)
+
+    # ONE aggregation for all heads: flatten heads into the batch axis
+    # (head-major, like graph_conv's flatten_channels) and carry alpha as a
+    # vector edge feature broadcast over the head width
+    def flat(t):
+        return jnp.broadcast_to(t, (heads,) + t.shape).reshape(
+            (heads * batch,) + t.shape[1:])
+
+    e_vec = jnp.repeat(
+        alpha.transpose(2, 0, 1).reshape(heads * batch, nnz_pad)[..., None],
+        d_head, axis=-1)
+    a_flat = BatchedCOO(row_ids=flat(adj.row_ids), col_ids=flat(adj.col_ids),
+                        values=e_vec, nnz=flat(adj.nnz),
+                        n_rows=flat(adj.n_rows))
+    out = message_passing(a_flat, h.reshape(heads * batch, m_pad, d_head),
+                          op="mul", reduce="sum", impl=impl, k_pad=k_pad,
+                          interpret=interpret, mesh=mesh)
+    out = out.reshape(heads, batch, m_pad, d_head)
+    return (out.transpose(1, 2, 0, 3).reshape(batch, m_pad, heads * d_head)
+            + params["b"])
+
+
+def init_rgcn_layer(key, n_in: int, n_out: int, relations: int):
+    """R-GCN parameters: one weight per relation (stacked for the grouped
+    matmul), a self-loop weight, and a bias."""
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(n_in)
+    return {
+        "w_rel": jax.random.uniform(k1, (relations, n_in, n_out), jnp.float32,
+                                    -scale, scale),
+        "w_self": jax.random.uniform(k2, (n_in, n_out), jnp.float32,
+                                     -scale, scale),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def rgcn_layer(
+    params,
+    adj: Sequence[BatchedCOO],   # one BatchedCOO per relation
+    x: jax.Array,                # (batch, m_pad, n_in)
+    *,
+    impl: str = "auto",
+    k_pad: int | None = None,
+    interpret: bool | None = None,
+    mesh=None,
+) -> jax.Array:
+    """One R-GCN layer: ``out[i] = Σ_r mean_{j ∈ N_r(i)} (x[j] · W_r)
+    + x[i] · W_self + b``.
+
+    The per-relation transforms are ONE ragged grouped matmul over
+    relation-major tokens (every graph's node block repeated per relation —
+    equal group sizes, the capacity-style dispatch of DESIGN.md §4), and the
+    per-relation mean aggregation is ONE ``(copy_lhs, mean)`` g-SpMM over
+    the relation-flattened batch (``graph_conv.flatten_channels`` — the mean
+    normalizer 1/|N_r(i)| is exactly the g-SpMM mean-reduce identity, with
+    zero-degree rows contributing the 0.0 identity).
+    """
+    relations = len(adj)
+    batch, m_pad, n_in = x.shape
+    n_out = params["w_rel"].shape[-1]
+    tokens = m_pad * batch
+
+    # relation-major tokens: [all nodes under W_0 | all nodes under W_1 | …]
+    xt = jnp.broadcast_to(x.reshape(1, tokens, n_in),
+                          (relations, tokens, n_in)).reshape(-1, n_in)
+    h = grouped_matmul(xt, params["w_rel"],
+                       jnp.full((relations,), tokens, jnp.int32),
+                       interpret=interpret)
+    h = h.reshape(relations * batch, m_pad, n_out)
+
+    a_flat = flatten_channels(adj)
+    agg = message_passing(a_flat, h, op="copy_lhs", reduce="mean",
+                          impl=impl, k_pad=k_pad, interpret=interpret,
+                          mesh=mesh)
+    y = jnp.sum(agg.reshape(relations, batch, m_pad, n_out), axis=0)
+    return y + x @ params["w_self"] + params["b"]

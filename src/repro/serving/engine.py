@@ -221,11 +221,18 @@ class GraphServeEngine:
 
     def layer_decision(self):
         """The adaptive layer decision for this engine's (fixed) wave
-        geometry — fused megakernel vs stacked SpMM — for the first conv
-        layer. Audit/ops visibility; the jitted apply resolves identically."""
+        geometry — fused megakernel vs stacked SpMM for ``layer="gcn"``, the
+        g-SpMM workload for ``"gat"``/``"rgcn"`` (DESIGN.md §11) — for the
+        first conv layer. Audit/ops visibility; the jitted apply resolves
+        identically."""
         from repro.core.formats import BatchedCOO
         from repro.core.graph_conv import resolve_graph_conv_impl
 
+        if self.cfg.layer != "gcn":
+            from repro.core.gcn import resolve_conv_impls
+
+            return resolve_conv_impls(self.cfg, self.batch, self.m_pad,
+                                      self.nnz_pad, mesh=self.mesh)[0]
         z2 = jnp.zeros((self.batch, self.nnz_pad), jnp.int32)
         adj = [BatchedCOO(z2, z2, z2.astype(jnp.float32),
                           jnp.zeros((self.batch,), jnp.int32),

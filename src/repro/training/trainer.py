@@ -171,6 +171,13 @@ class GCNTrainer:
         logging only; the step itself resolves at trace time."""
         from repro.core.graph_conv import resolve_graph_conv_impl
 
+        if self.cfg.layer != "gcn":
+            from repro.core.gcn import resolve_conv_impls
+
+            adj, x = batch["adj"], batch["x"]
+            return resolve_conv_impls(
+                self.cfg, x.shape[0], x.shape[1], adj[0].row_ids.shape[1],
+                mesh=self.mesh)[0]
         return resolve_graph_conv_impl(
             batch["adj"], batch["x"], self.cfg.conv_widths[0],
             impl=self.cfg.impl, k_pad=self.cfg.k_pad,

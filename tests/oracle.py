@@ -18,10 +18,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.autotune import precision_of
+from repro.autotune import GSPMM_IMPLS, precision_of
 from repro.core import coo_from_lists, max_row_degree, random_batch
 from repro.core.graph_conv import graph_conv_batched, init_graph_conv
-from repro.core.spmm import IMPLS, batched_spmm
+from repro.core.spmm import (
+    GSPMM_OPS,
+    GSPMM_REDUCES,
+    IMPLS,
+    batched_gspmm,
+    batched_spmm,
+)
+from repro.kernels import ref
 
 CASES = ("uniform", "skewed", "zero_nnz")
 
@@ -161,6 +168,92 @@ def check_layer_forward(impl: str) -> None:
         assert got_j.dtype == x.dtype, f"{impl} output dtype on {name}"
         np.testing.assert_allclose(np.asarray(got_j), want, atol=atol,
                                    rtol=rtol, err_msg=f"{impl} on {name}")
+
+
+# ---------------------------------------------------------------------------
+# g-SpMM: the full (op × reduce × edge-kind) message-passing matrix
+# (DESIGN.md §11) on the same three acceptance regimes. The autodiff grads
+# of the pure-jnp ``ref.batched_gspmm_ref`` are the ground truth for every
+# corner — including max-reduce tie-splitting and the zero-degree identity.
+# ---------------------------------------------------------------------------
+
+GSPMM_EDGE_KINDS = ("scalar", "vector")
+
+GSPMM_MATRIX = tuple(
+    (op, red) for op in GSPMM_OPS for red in GSPMM_REDUCES)
+
+
+def gspmm_cases(edges: str = "scalar", n_b: int = 48):
+    """:func:`spmm_cases` geometry, optionally with ``(batch, nnz_pad,
+    n_b)`` per-edge feature vectors instead of scalar values. Padded slots
+    keep the 0.0 values the dataset formats guarantee (§IV-C) — the
+    ``(mul, sum, scalar)`` corner delegates to plain batched SpMM, which
+    RELIES on that invariant instead of masking."""
+    out = []
+    for name, coo, m_pad, b, k_pad in spmm_cases():
+        if edges == "vector":
+            rng = np.random.default_rng(14)
+            vv = rng.normal(
+                size=coo.values.shape + (n_b,)).astype(np.float32)
+            vv = np.where(gspmm_valid_mask(coo)[..., None], vv, 0.0)
+            coo = dataclasses.replace(coo, values=jnp.asarray(vv))
+        out.append((name, coo, m_pad, b, k_pad))
+    return out
+
+
+def gspmm_valid_mask(coo) -> np.ndarray:
+    """(batch, nnz_pad) bool — True at real edges, False at padding."""
+    return (np.arange(coo.row_ids.shape[1])[None, :]
+            < np.asarray(coo.nnz)[:, None])
+
+
+def check_gspmm_forward(impl: str, op: str, reduce: str, edges: str) -> None:
+    """One (impl, op, reduce, edge-kind) corner, forward, vs the pure-jnp
+    oracle on every acceptance regime. All g-SpMM impls are f32."""
+    atol, rtol = TOLS["f32"]
+    for name, coo, m_pad, b, k_pad in gspmm_cases(edges):
+        want = np.asarray(ref.batched_gspmm_ref(coo, b, m_pad, op=op,
+                                                reduce=reduce))
+        got = batched_gspmm(coo, b, op=op, reduce=reduce, impl=impl,
+                            k_pad=k_pad)
+        assert got.dtype == b.dtype, \
+            f"{impl} ({op},{reduce},{edges}) dtype on {name}"
+        np.testing.assert_allclose(
+            np.asarray(got), want, atol=atol, rtol=rtol,
+            err_msg=f"{impl} ({op},{reduce},{edges}) on {name}")
+
+
+def check_gspmm_grads(impl: str, op: str, reduce: str, edges: str) -> None:
+    """Both grads of a tanh-sum loss vs JAX autodiff of the pure-jnp oracle.
+
+    dValues is compared at VALID slots only: the delegated ``(mul, sum,
+    scalar)`` corner inherits batched_spmm's legacy VJP, which reports
+    unmasked cotangents at padded slots — harmless (padded values are
+    pinned 0.0 and never trained) but not bitwise-zero there."""
+    atol, rtol = TOLS["f32"]
+    for name, coo, m_pad, b, k_pad in gspmm_cases(edges):
+        def loss(values, bb, coo=coo, k_pad=k_pad):
+            c = batched_gspmm(dataclasses.replace(coo, values=values), bb,
+                              op=op, reduce=reduce, impl=impl, k_pad=k_pad)
+            return jnp.sum(jnp.tanh(c))
+
+        def loss_ref(values, bb, coo=coo, m_pad=m_pad):
+            c = ref.batched_gspmm_ref(
+                dataclasses.replace(coo, values=values), bb, m_pad,
+                op=op, reduce=reduce)
+            return jnp.sum(jnp.tanh(c))
+
+        g = jax.grad(loss, argnums=(0, 1))(coo.values, b)
+        g_ref = jax.grad(loss_ref, argnums=(0, 1))(coo.values, b)
+        vm = gspmm_valid_mask(coo).astype(np.float32)
+        if np.asarray(g[0]).ndim == 3:
+            vm = vm[..., None]
+        np.testing.assert_allclose(
+            np.asarray(g[0]) * vm, np.asarray(g_ref[0]) * vm, atol=atol,
+            rtol=rtol, err_msg=f"{impl} ({op},{reduce},{edges}) dval {name}")
+        np.testing.assert_allclose(
+            np.asarray(g[1]), np.asarray(g_ref[1]), atol=atol, rtol=rtol,
+            err_msg=f"{impl} ({op},{reduce},{edges}) db on {name}")
 
 
 def check_layer_grads(impl: str) -> None:
