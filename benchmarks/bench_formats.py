@@ -12,12 +12,17 @@ timed here; their TPU costs are modeled in `autotune/cost_model.py`):
              max row degree (sized via `repro.core.formats.max_row_degree`,
              so no silent nnz drops);
 - ``csr``    CSR segment-sum over the flat nnz arrays;
-- ``dense``  densify + batched GEMM (the gemmBatched baseline).
+- ``dense``  densify + batched GEMM (the gemmBatched baseline);
+- ``hybrid`` degree-binned dense/sparse split (DESIGN.md §12): hub rows as
+             a small dense GEMM slab, tail rows through the CSR path.
 
 Geometries mirror the figures: fig8 (small fixed-size molecules, feature
 width sweep axis), fig9 (larger uniform matrices), fig10 (mixed sizes — the
-skewed-degree regime where the flat-nnz formats stop paying max-degree
-padding). Rows persist to ``BENCH_formats.json``; each geometry also emits
+regime the paper CALLS skewed, though its row degrees stay near-uniform)
+plus ``powerlaw`` (genuinely degree-skewed rows with hubs, the hybrid
+path's target; it also persists a ``best_tpu_model`` row pinning the cost
+model's TPU-posture ranking). Rows persist to ``BENCH_formats.json``; each
+geometry also emits
 a ``best=`` row whose ``ratio=`` (t_ref / t_best, ≥ 1.0 by construction
 since ref is a candidate) opts into the CI bench-JSON gate
 (`benchmarks/check_bench_json.py`) as a harness-integrity check, and an
@@ -36,24 +41,35 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import max_row_degree, random_batch
+from repro.core.formats import random_powerlaw_batch
 from repro.core.spmm import batched_spmm
 
-FORMATS = ("ref", "ell", "csr", "dense")
+FORMATS = ("ref", "ell", "csr", "dense", "hybrid")
 
 GEOMETRIES = {
     # name: (batch, dim, nnz_per_row, n_b)
     "fig8": (100, 20, 2, 64),         # many small molecules (Table I scale)
     "fig9": (40, 64, 2, 64),          # larger uniform matrices
     "fig10": (40, (8, 64), (1, 8), 64),  # mixed sizes: the skewed regime
+    # DEGREE-skewed (power-law rows, hubs ≈ m_pad): fig10 mixes matrix
+    # SIZES but draws near-uniform degrees — this family is the
+    # load-imbalance regime the hybrid dispatch targets (DESIGN.md §12).
+    # For powerlaw geometries the third field is the power-law MEAN degree.
+    "powerlaw": (40, 256, 8, 64),
 }
 
 # smoke keeps dims/features small but the BATCH big enough that the
 # batched-vs-loop guard ratio has real margin over the 0.5 CI gate (the
-# sequential loop's per-sample dispatch has to dominate)
+# sequential loop's per-sample dispatch has to dominate). powerlaw is the
+# one full-size smoke geometry: the hybrid split only amortizes once
+# dmin = m_pad/4 sits well below the hub degree AND the saved serialization
+# clears the prep overhead, which needs the full (batch, m_pad) scale —
+# smoke only drops the iteration count.
 SMOKE = {
     "fig8": (64, 16, 2, 32),
     "fig9": (32, 32, 2, 32),
     "fig10": (32, (8, 32), (1, 6), 32),
+    "powerlaw": (40, 256, 8, 64),
 }
 
 
@@ -63,7 +79,12 @@ def sweep_geometry(name: str, batch, dim, nnz, n_b, *, iters: int = 10):
     # these rows are a cross-PR perf trajectory — inputs must be identical
     # run to run for the persisted ratios to mean anything
     rng = np.random.default_rng(zlib.crc32(name.encode()))
-    coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
+    if name.startswith("powerlaw"):
+        # degree-skewed family: `nnz` is the power-law MEAN degree
+        coo, m_pad = random_powerlaw_batch(rng, batch=batch, dim=dim,
+                                           avg_deg=nnz)
+    else:
+        coo, m_pad = random_batch(rng, batch=batch, dim=dim, nnz_per_row=nnz)
     b = jnp.asarray(rng.normal(size=(batch, m_pad, n_b)), jnp.float32)
     # lossless ELL sizing: the batch's true max row degree, never a guess
     k_pad = int(np.asarray(max_row_degree(coo, m_pad)).max())
@@ -91,7 +112,36 @@ def sweep_geometry(name: str, batch, dim, nnz, n_b, *, iters: int = 10):
         coo, b, warmup=2, iters=iters)
     row(f"formats/{name}/batched_vs_loop", t_loop * 1e6,
         f"loop_vs_ref={t_loop / t_ref:.2f}x")
+    if name.startswith("powerlaw"):
+        modeled_tpu_row(name, batch=coo.row_ids.shape[0], m_pad=m_pad,
+                        nnz_pad=coo.nnz_pad, n_b=n_b, max_deg=k_pad)
     return times
+
+
+def modeled_tpu_row(name, *, batch, m_pad, nnz_pad, n_b, max_deg):
+    """Persist the cost model's TPU ranking for a skewed geometry.
+
+    The hybrid split exists for the TPU serialization bound, which CPU
+    wall-clock cannot witness (Pallas runs interpret-mode here). This row
+    pins the MODELED decision instead: with the measured max row degree on
+    the Workload, pallas_hybrid must out-rank every prior sparse class
+    (ratio = prior_best_sparse / hybrid, gated >= 1.0 in
+    check_bench_json.py). A cost-model regression that stops picking the
+    hybrid path on its target regime fails the bench gate, not just a
+    unit test.
+    """
+    from repro.autotune.cost_model import Workload, rank
+    from repro.autotune.selector import KINDS
+
+    w = Workload(batch=batch, m_pad=m_pad, nnz_pad=nnz_pad, k_pad=None,
+                 n_b=n_b, max_deg=max_deg)
+    scores = rank(w, allow_pallas=True)
+    sparse = [(impl, t) for impl, t in scores
+              if KINDS[impl] in ("scatter", "ell", "csr", "coo", "hybrid")]
+    best, t_best = sparse[0]
+    t_prior = next(t for impl, t in sparse if KINDS[impl] != "hybrid")
+    row(f"formats/{name}/best_tpu_model", t_best * 1e6,
+        f"best={best},ratio={t_prior / t_best:.2f},modeled md{max_deg}")
 
 
 def main(smoke: bool = False):

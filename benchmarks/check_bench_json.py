@@ -24,7 +24,15 @@ Two classes of failure, both cheap to hit when a harness regresses silently:
    real measurement (gated at 1.0 on the summary's best), not the
    ≥-1.0-by-construction ``best=`` rows the loose MIN_RATIO floor guards.
 
-4. **g-SpMM gates** (``BENCH_gspmm.json`` only, suite="gspmm"): every
+4. **Formats gates** (``BENCH_formats.json`` only, suite="formats"): every
+   geometry must carry a measured ``hybrid`` row (the degree-binned dispatch
+   stays in the sweep), the degree-skewed ``powerlaw`` geometry must be
+   present, and its ``formats/powerlaw/best_tpu_model`` row must name
+   ``best=pallas_hybrid`` with ``ratio>=1.0`` — the ISSUE 8 acceptance pin
+   that the cost model keeps picking the hybrid path over the prior best
+   sparse class on its target regime.
+
+5. **g-SpMM gates** (``BENCH_gspmm.json`` only, suite="gspmm"): every
    ``maxerr=`` row must stay within the f32 ceiling (all g-SpMM impls are
    full precision), and all 9 ``gspmm/<op>_<reduce>/best`` rows plus the
    ``gspmm/gat_vector/best`` vector-edge row must be present — the sweep
@@ -60,6 +68,50 @@ SUMMARY_ROW = "precision/summary/auto"
 SUMMARY_RE = re.compile(
     r"reduced_selected=([01]).*best_speedup=([-+0-9.eE]+)")
 MIN_BEST_SPEEDUP = 1.0
+
+# --- formats-suite gates (BENCH_formats.json, suite="formats") ------------
+HYBRID_MODEL_ROW = "formats/powerlaw/best_tpu_model"
+BEST_RE = re.compile(r"(?:^|[ ,;])best=(\w+)")
+MIN_HYBRID_RATIO = 1.0
+
+
+def _check_formats_rows(path, rows) -> list[str]:
+    errors: list[str] = []
+    names = {r.get("name") for r in rows}
+    geos = sorted({n.split("/")[1] for n in names
+                   if isinstance(n, str) and n.startswith("formats/")})
+    for g in geos:
+        if f"formats/{g}/hybrid" not in names:
+            errors.append(
+                f"{path.name}: geometry {g!r} has no measured hybrid row — "
+                "the degree-binned dispatch fell out of the sweep")
+    if not any(g.startswith("powerlaw") for g in geos):
+        errors.append(
+            f"{path.name}: no powerlaw geometry — the degree-skewed family "
+            "the hybrid path targets is no longer benchmarked")
+        return errors
+    brow = next((r for r in rows if r.get("name") == HYBRID_MODEL_ROW), None)
+    if brow is None:
+        errors.append(
+            f"{path.name}: missing required row {HYBRID_MODEL_ROW!r}")
+        return errors
+    derived = str(brow.get("derived", ""))
+    bm = BEST_RE.search(derived)
+    rm = RATIO_RE.search(derived)
+    if bm is None or bm.group(1) != "pallas_hybrid":
+        errors.append(
+            f"{path.name}: {HYBRID_MODEL_ROW} best="
+            f"{bm.group(1) if bm else '<missing>'} != pallas_hybrid — the "
+            "cost model stopped picking the hybrid path on the skewed "
+            "regime (ISSUE 8 gate)")
+    if rm is None or float(rm.group(1)) < MIN_HYBRID_RATIO:
+        errors.append(
+            f"{path.name}: {HYBRID_MODEL_ROW} ratio="
+            f"{rm.group(1) if rm else '<missing>'} < {MIN_HYBRID_RATIO} — "
+            "hybrid no longer beats the prior best sparse impl "
+            "(ISSUE 8 gate)")
+    return errors
+
 
 # --- gspmm-suite gates (BENCH_gspmm.json, suite="gspmm") ------------------
 # every g-SpMM impl is f32, so its maxerr= rows are held to the f32 ceiling
@@ -162,6 +214,8 @@ def check_file(path: pathlib.Path) -> list[str]:
                     f"ratio={ratio} < {MIN_RATIO} — regression guard")
     if doc.get("suite") == "precision":
         errors.extend(_check_precision_rows(path, doc.get("rows", [])))
+    if doc.get("suite") == "formats":
+        errors.extend(_check_formats_rows(path, doc.get("rows", [])))
     if doc.get("suite") == "gspmm":
         errors.extend(_check_gspmm_rows(path, doc.get("rows", [])))
     return errors

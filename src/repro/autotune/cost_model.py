@@ -68,6 +68,7 @@ PRECISION_IMPLS = {
     "pallas_ell_i8": ("pallas_ell", "i8"),
     "pallas_csr_i8": ("pallas_csr", "i8"),
     "fused_bf16": ("fused", "bf16"),
+    "pallas_hybrid_bf16": ("pallas_hybrid", "bf16"),
 }
 
 
@@ -115,6 +116,7 @@ from repro.core.batching import (  # noqa: E402
     plan_batched_gemm,
     plan_batched_spmm,
     plan_fused_graph_conv,
+    plan_hybrid,
 )
 
 # Overhead constants (seconds). These are *relative* knobs, not measurements:
@@ -170,6 +172,12 @@ class Workload:
     d_e: int | None = None  # edge-feature width (g-SpMM vector edges)
     reduce: str = "sum"     # g-SpMM reduce kind: "sum" | "max" | "mean"
     op: str = "mul"         # g-SpMM combine op: "mul" | "add" | "copy_lhs"
+    # the SKEW knob for the row-split classes: per-matrix (batch-max) max
+    # row degree from host metadata. The CSR kernel's slot loop runs this
+    # many trips — the serialization bound it actually pays — and the
+    # hybrid split amortizes only when it exceeds the hub threshold. None
+    # keeps every legacy estimate and cache key unchanged.
+    max_deg: int | None = None
 
     def key(self) -> str:
         """Stable string key for the persistent tuning cache (DESIGN.md §5).
@@ -189,6 +197,8 @@ class Workload:
             base += f"_r{self.reduce}"
         if self.op != "mul":
             base += f"_o{self.op}"
+        if self.max_deg is not None:
+            base += f"_md{self.max_deg}"
         return base
 
     @property
@@ -290,9 +300,15 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
     if base in ("csr", "pallas_csr"):
-        # static stand-in for the kernel's dynamic per-matrix row bound
-        row_bound = w.k_pad if w.k_pad is not None else max(
-            1, -(-w.nnz_pad // w.m_pad))
+        # The kernel's dynamic per-matrix row bound IS the max row degree —
+        # one hub row serializes the whole matrix's slot loop. Price the
+        # host-measured ``max_deg`` when known (the serialization bound the
+        # kernel actually pays on skewed batches); fall back to ``k_pad``
+        # (the same quantity, when an ELL bound was sized) and only then to
+        # the uniform-degree estimate.
+        row_bound = w.max_deg if w.max_deg is not None else (
+            w.k_pad if w.k_pad is not None else max(
+                1, -(-w.nnz_pad // w.m_pad)))
         if base == "csr":
             # segment-sum reference: ref's gather/scatter traffic + rpt
             gather = w.batch * w.nnz_pad * w.n_b * fb
@@ -317,6 +333,65 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         return (_roofline(flops, bytes_, vpu_peak, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
+    if base in ("hybrid", "pallas_hybrid"):
+        # Degree-binned hybrid split (DESIGN.md §12): hub rows (deg >= dmin)
+        # run as ONE MXU dense tile, the remainder runs the CSR slot loop
+        # whose trip count is bounded by dmin - 1 BY CONSTRUCTION — skew
+        # cannot serialize it. The price of that bound is the one-time
+        # permutation (sort/rank/pointer gathers) and the slab densify,
+        # charged below so ``auto`` picks hybrid only when binning amortizes
+        # (i.e. when the measured ``max_deg`` actually exceeds dmin).
+        plan = spmm_plan(w, impl)
+        if base == "pallas_hybrid" and plan.case == 3:
+            return float("inf")   # kernels/ops.py falls back before Pallas
+        hp = plan_hybrid(batch=w.batch, m_pad=w.m_pad, n_b=w.n_b,
+                         nnz_pad=w.nnz_pad,
+                         itemsize=2 if policy == "bf16" else w.itemsize)
+        # one-time costs both siblings pay: slab build+read, degree/argsort/
+        # rank/pointer-permute passes
+        slab_bytes = 2.0 * w.batch * hp.d_pad * w.m_pad * vb
+        perm_bytes = 6.0 * w.batch * w.m_pad * 4
+        n_prep = 6   # degrees, argsort, rank, pointer permutes, slab, bins
+        if base == "hybrid":
+            # pure-XLA sibling: the remainder is an ELL gather over a STATIC
+            # k = dmin - 1 slot budget (sound because non-hub rows have
+            # deg < dmin) — per-slot n_b-float gathers like the segment-sum
+            # classes — plus the hub einsum on the MXU
+            k_sp = min(w.m_pad, max(1, hp.dmin - 1))
+            slots = w.batch * w.m_pad * k_sp
+            flops_s = 2.0 * slots * w.n_b
+            bytes_ = (slots * (w.n_b * fb + 8)
+                      + SCATTER_PENALTY * out_bytes + slab_bytes + perm_bytes)
+            t = _roofline(flops_s, bytes_, vpu_peak, hw)
+            if hp.d_pad:
+                flops_d = 2.0 * w.batch * hp.d_pad * w.m_pad * w.n_b
+                t += flops_d / (hw.peak_flops * _mxu_eff(hp.d_pad, w.n_b))
+            return t + (1 + n_prep) * OP_OVERHEAD
+        if w.max_deg is not None:
+            # measured skew: hubs above dmin leave the slot loop, so the
+            # serialization bound drops to min(max_deg, dmin - 1)
+            row_bound = min(w.max_deg, max(1, hp.dmin - 1))
+        else:
+            # no skew evidence — price the SAME bound as the CSR class, so
+            # hybrid's strictly-positive extras (slab, permutation, MXU
+            # tiles) keep it from winning on uniform-looking workloads
+            row_bound = (w.k_pad if w.k_pad is not None
+                         else max(1, -(-w.nnz_pad // w.m_pad)))
+        flops_s = 2.0 * w.batch * w.m_pad * row_bound * w.n_b
+        # CSR-remainder traffic + the permuted row pointers and rank vector
+        per_step = (w.m_pad * plan.n_block * fb
+                    + w.nnz_pad * ((4 + w.itemsize) if f32_path else (ib + vb))
+                    + 4 * w.m_pad * 4)
+        bytes_ = (w.batch * plan.p * per_step + out_bytes
+                  + slab_bytes + perm_bytes)
+        t = _roofline(flops_s, bytes_, vpu_peak, hw)
+        if hp.d_pad:
+            flops_d = 2.0 * w.batch * hp.d_pad * w.m_pad * w.n_b
+            t += flops_d / (hw.peak_flops * _mxu_eff(hp.d_pad, plan.n_block))
+        steps = w.batch * plan.p
+        return (t + steps * GRID_STEP_OVERHEAD
+                + (1 + n_prep) * OP_OVERHEAD)
+
     if base == "pallas_coo":
         plan = spmm_plan(w, impl)
         if plan.case == 3:
@@ -336,7 +411,7 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
                 + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
 
-    if base == "fused":
+    if base in ("fused", "fused_hybrid"):
         # Fused graph-conv megakernel (DESIGN.md §7): per (matrix × panel)
         # grid step, `channels` MXU feature transforms + one-hot-scatter
         # SpMMs accumulate into one VMEM panel; intermediates never touch
@@ -350,6 +425,28 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         if plan.case == 3:
             return float("inf")
         nnz_eff = w.nnz_avg if w.nnz_avg is not None else w.nnz_pad
+        extra = 0.0
+        if base == "fused_hybrid":
+            # hybrid fold-in (DESIGN.md §12): hub rows leave the one-hot
+            # chunk loop for a per-channel dense slab dot; the split pays
+            # the one-time permutation + slab densify. Only a measured
+            # ``max_deg`` past the hub threshold shrinks the chunk count,
+            # so without skew metadata fused_hybrid prices >= fused and
+            # ``auto`` keeps the plain megakernel.
+            hp = plan_hybrid(batch=w.batch, m_pad=w.m_pad, n_b=w.n_b,
+                             nnz_pad=w.channels * w.nnz_pad,
+                             itemsize=2 if policy == "bf16" else w.itemsize)
+            md = w.max_deg if w.max_deg is not None else 0
+            if md >= hp.dmin:
+                nnz_eff = max(0, nnz_eff - (-(-md // w.channels)))
+            flops_d = (2.0 * w.batch * plan.p * w.channels * hp.d_pad
+                       * w.m_pad * plan.n_block)
+            slab_bytes = 2.0 * w.batch * w.channels * hp.d_pad * w.m_pad * vb
+            perm_bytes = 6.0 * w.batch * w.m_pad * 4
+            extra = (flops_d / (hw.peak_flops
+                                * _mxu_eff(max(hp.d_pad, 1), plan.n_block))
+                     + (slab_bytes + perm_bytes) / hw.hbm_bw
+                     + 5 * OP_OVERHEAD)
         chunks = max(1, -(-nnz_eff // _COO_CHUNK))
         steps = w.batch * plan.p
         flops = (2.0 * steps * w.channels * w.m_pad * plan.n_block
@@ -361,7 +458,7 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         bytes_ = steps * per_step + out_bytes       # output written ONCE
         eff = _mxu_eff(w.m_pad, plan.n_block)
         return (_roofline(flops, bytes_, hw.peak_flops * eff, hw)
-                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD)
+                + steps * GRID_STEP_OVERHEAD + OP_OVERHEAD + extra)
 
     if impl in ("dense", "pallas_gemm"):
         densify = 2.0 * w.batch * w.m_pad * w.m_pad * w.itemsize  # write+read
@@ -383,13 +480,15 @@ def _candidates(dtype: str, allow_pallas: bool) -> list[str]:
     reproduces the legacy candidate set exactly; reduced policies ADD their
     variants next to the full-precision impls (the model decides whether the
     byte savings beat f32, it is never forced)."""
-    cands = ["ref", "ell", "csr", "dense", "loop"]
+    cands = ["ref", "ell", "csr", "hybrid", "dense", "loop"]
     if dtype in ("bf16", "i8"):
         cands += ["ell_bf16", "csr_bf16"]
     if allow_pallas:
-        cands += ["pallas_ell", "pallas_csr", "pallas_coo", "pallas_gemm"]
+        cands += ["pallas_ell", "pallas_csr", "pallas_coo", "pallas_hybrid",
+                  "pallas_gemm"]
         if dtype in ("bf16", "i8"):
-            cands += ["pallas_ell_bf16", "pallas_csr_bf16", "pallas_coo_bf16"]
+            cands += ["pallas_ell_bf16", "pallas_csr_bf16", "pallas_coo_bf16",
+                      "pallas_hybrid_bf16"]
         if dtype == "i8":
             cands += ["pallas_ell_i8", "pallas_csr_i8"]
     return cands
@@ -428,7 +527,7 @@ def estimate_layer(w: Workload, impl: str, hw: HW = HW()) -> float:
     """
     if w.channels is None or w.n_in is None:
         raise ValueError(f"not a layer workload (channels/n_in unset): {w}")
-    if precision_of(impl)[0] == "fused":
+    if precision_of(impl)[0].startswith("fused"):
         return estimate(w, impl, hw)
     stacked = dataclasses.replace(w, batch=w.batch * w.channels,
                                   channels=None, n_in=None, nnz_avg=None)
@@ -464,7 +563,7 @@ def rank_layer(w: Workload, *, allow_pallas: bool = True,
     """
     candidates = _candidates(w.dtype, allow_pallas)
     if allow_pallas:
-        candidates += ["fused"]
+        candidates += ["fused", "fused_hybrid"]
         if w.dtype in ("bf16", "i8"):
             candidates += ["fused_bf16"]
     scored = [(i, estimate_layer(w, i, hw)) for i in candidates]

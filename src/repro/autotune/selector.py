@@ -43,7 +43,7 @@ def _layer_plan(w: Workload, impl: str) -> BatchPlan:
     for the fused class (variants block at their policy's element size), the
     stacked (channels·batch) SpMM plan otherwise."""
     base, policy = precision_of(impl)
-    if base == "fused":
+    if base.startswith("fused"):
         return plan_fused_graph_conv(
             batch=w.batch, m_pad=w.m_pad, n_in=w.n_in or 0, n_out=w.n_b,
             channels=w.channels or 1, nnz_pad=w.nnz_pad,
@@ -63,8 +63,9 @@ KINDS = {
     "ell": "ell", "pallas_ell": "ell",
     "csr": "csr", "pallas_csr": "csr",
     "pallas_coo": "coo",
+    "hybrid": "hybrid", "pallas_hybrid": "hybrid",
     "dense": "gemm", "pallas_gemm": "gemm",
-    "fused": "fused",
+    "fused": "fused", "fused_hybrid": "fused",
 }
 KINDS.update({v: KINDS[base] for v, (base, _) in PRECISION_IMPLS.items()})
 

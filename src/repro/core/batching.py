@@ -22,6 +22,7 @@ identical blocking decisions.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 # TPU constants: ~16 MiB VMEM per TensorCore (v5e), with a conservative
 # per-step budget because Pallas double-buffers every block for pipelining.
@@ -108,6 +109,80 @@ def plan_batched_spmm(
     p = -(-n_b // n_block)
     case = 1 if p == 1 else 2
     return BatchPlan(batch, m_pad, n_b, n_block, p, case, step)
+
+
+# Hybrid dispatch defaults (DESIGN.md §12): a row whose density
+# ``deg / m_pad`` reaches TAU is routed to the dense MXU slab; everything
+# below stays in the rpt-bounded CSR remainder, whose per-row trip count is
+# then bounded by ``dmin - 1`` *by construction*. NBINS_TARGET bins the
+# sorted row axis into similar-work groups so adjacent program ids get
+# near-equal fori_loop trip counts.
+HYBRID_TAU = 0.25
+HYBRID_NBINS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridPlan:
+    """Static decision record for the degree-binned hybrid SpMM path.
+
+    ``spmm`` carries the shared column-panel blocking (same grid as the CSR
+    kernel). ``dmin`` is the hub threshold in non-zeros per row
+    (``ceil(tau * m_pad)``; a row with ``deg >= dmin`` — density exactly AT
+    the threshold included — is a hub). ``d_pad`` is the static height of
+    the dense hub slab: since every hub holds at least ``dmin`` non-zeros,
+    at most ``nnz_pad // dmin`` rows can ever classify dense, so the slab is
+    provably tall enough and ``d_pad == 0`` means *no* MXU tile group is
+    emitted at all (the degenerate-input guard: all-empty batches and
+    ``nnz_pad < dmin`` never reach the dense dot). ``bins`` are static
+    ``(start, stop)`` slices of the degree-sorted row axis, every edge a
+    SUBLANES multiple so per-bin accumulators tile cleanly.
+    """
+
+    spmm: BatchPlan
+    tau: float
+    dmin: int           # hub threshold, in nnz per row (>= comparison)
+    d_pad: int          # static dense-slab height (0 => no dense tile group)
+    bins: tuple[tuple[int, int], ...]  # sorted-row-axis work bins
+
+    @property
+    def nbins(self) -> int:
+        return len(self.bins)
+
+
+def plan_hybrid(
+    *,
+    batch: int,
+    m_pad: int,
+    n_b: int,
+    nnz_pad: int,
+    itemsize: int = 4,
+    tau: float = HYBRID_TAU,
+    nbins: int = HYBRID_NBINS,
+) -> HybridPlan:
+    """Plan the degree-binned hybrid split (DESIGN.md §12).
+
+    Static-only, like every planner here: the *threshold* and *capacity*
+    are shape-derived; which rows actually classify dense is runtime data
+    (``hybrid_operands`` in kernels/batched_spmm_hybrid.py).
+    """
+    if not 0.0 < tau <= 1.0:
+        raise ValueError(f"tau must be in (0, 1], got {tau}")
+    base = plan_batched_spmm(batch=batch, m_pad=m_pad, n_b=n_b,
+                             slots=nnz_pad, itemsize=itemsize)
+    m_pad = base.m_pad
+    dmin = max(1, math.ceil(tau * m_pad))
+    # slab capacity: each hub row holds >= dmin nnz, so nnz_pad // dmin
+    # bounds the hub count. nnz_pad < dmin => no row can be a hub => d_pad=0
+    # and the kernel never materialises a dense operand (satellite guard).
+    if nnz_pad < dmin:
+        d_pad = 0
+    else:
+        d_pad = min(m_pad, _round_up(max(1, nnz_pad // dmin), SUBLANES))
+    rows_per_bin = max(SUBLANES,
+                       _round_up(max(1, m_pad // max(1, nbins)), SUBLANES))
+    bins = tuple((s, min(s + rows_per_bin, m_pad))
+                 for s in range(0, m_pad, rows_per_bin))
+    return HybridPlan(base, tau, dmin, d_pad, bins)
 
 
 def chunk_counts(nnz_per_sample) -> tuple[int, ...]:

@@ -417,3 +417,46 @@ def random_batch(
         n_rows.append(m)
     m_pad = _round_up(max(n_rows), 8)
     return coo_from_lists(triples, n_rows, dtype=dtype), m_pad
+
+
+def random_powerlaw_batch(
+    rng: np.random.Generator,
+    *,
+    batch: int,
+    dim: int | tuple[int, int],
+    avg_deg: float,
+    alpha: float = 1.2,
+    self_loops: bool = True,
+    dtype=jnp.float32,
+) -> tuple[BatchedCOO, int]:
+    """Degree-SKEWED square sparse matrices: per-row degrees follow a
+    truncated power law (Zipf-like, ``deg_r ∝ (r+1)^-alpha`` over a random
+    row order), rescaled so the mean degree is ≈ ``avg_deg`` and capped at
+    ``dim``. The head rows are hubs holding a large fraction of the nnz —
+    the load-imbalance regime a flat row-split serializes on and the hybrid
+    dispatch's MXU tiles absorb (DESIGN.md §12). Returns (BatchedCOO, m_pad).
+    """
+    dims = (dim, dim) if isinstance(dim, int) else dim
+    triples, n_rows = [], []
+    for _ in range(batch):
+        m = int(rng.integers(dims[0], dims[1] + 1))
+        w = (np.arange(m, dtype=np.float64) + 1.0) ** -alpha
+        deg = np.minimum(
+            np.maximum(np.rint(w * (avg_deg * m / w.sum())), 0.0), m
+        ).astype(np.int64)
+        rng.shuffle(deg)        # hubs land on random row ids, not row 0..h
+        rows, cols = [], []
+        for r in range(m):
+            cs = rng.choice(m, size=int(deg[r]), replace=False).tolist()
+            rows.extend([r] * len(cs))
+            cols.extend(cs)
+            if self_loops and r not in cs:
+                rows.append(r)
+                cols.append(r)
+        rows = np.asarray(rows, np.int32)
+        cols = np.asarray(cols, np.int32)
+        vals = np.ones(len(rows), np.float32)
+        triples.append((rows, cols, vals))
+        n_rows.append(m)
+    m_pad = _round_up(max(n_rows), 8)
+    return coo_from_lists(triples, n_rows, dtype=dtype), m_pad

@@ -159,7 +159,7 @@ def graph_conv_batched(
             mesh=mesh, precision=precision).impl
 
     base, policy = precision_of(concrete)
-    if base == "fused":
+    if base.startswith("fused"):
         rids, cids, vals, nnz = stack_channels(adj)
         xx, ww, bb = x, params["w"], params["b"]
         if policy == "bf16":

@@ -336,11 +336,13 @@ def sharded_fused_graph_conv(
     come out replicated — exactly the all-reduce GSPMD would insert for the
     unfused path's dense MatMul.
     """
-    from repro.core.batching import plan_fused_graph_conv
+    from repro.autotune.cost_model import precision_of
+    from repro.core.batching import plan_fused_graph_conv, plan_hybrid
     from repro.kernels.fused_graph_conv import (
         fused_bwd,
         fused_forward,
         fused_graph_conv,
+        fused_hybrid_forward,
         runtime_chunks,
     )
     from repro.kernels.ops import bwd_impl_for
@@ -372,14 +374,28 @@ def sharded_fused_graph_conv(
         raise ValueError(
             f"m_pad={plan.m_pad} is planner case 3 (> LARGE_M): use the "
             "unfused graph_conv_batched fallback")
-    chunks = runtime_chunks(nnz)
+    hybrid = precision_of(impl)[0] == "fused_hybrid"
+    # 4th sharded forward operand: the hybrid prep re-derives chunk counts
+    # AFTER hub extraction, so it needs the raw per-channel nnz; the plain
+    # megakernel takes precomputed chunk counts
+    meta = nnz.astype(jnp.int32) if hybrid else runtime_chunks(nnz)
+    if hybrid:
+        # per-shard plan: the shapes each device actually runs (DESIGN.md §6)
+        hplan = plan_hybrid(batch=(batch + pad) // n, m_pad=m_pad,
+                            n_b=n_out, nnz_pad=channels * nnz_pad,
+                            itemsize=x.dtype.itemsize)
     bwd_impl = bwd_impl_for(impl) if not interpret else "ref"
 
     spec, repl = P(axis), P()
     rids, cids = row_ids, col_ids
 
-    def _fwd_local(rids_l, cids_l, vals_l, chunks_l, x_l, w_l, b_l):
-        return fused_forward(rids_l, cids_l, vals_l, chunks_l, x_l, w_l, b_l,
+    def _fwd_local(rids_l, cids_l, vals_l, meta_l, x_l, w_l, b_l):
+        if hybrid:
+            return fused_hybrid_forward(
+                rids_l, cids_l, vals_l, meta_l, x_l, w_l, b_l, None,
+                plan=plan, hplan=hplan, epilogue=epilogue,
+                interpret=interpret)
+        return fused_forward(rids_l, cids_l, vals_l, meta_l, x_l, w_l, b_l,
                              None, plan=plan, epilogue=epilogue,
                              interpret=interpret)
 
@@ -402,7 +418,7 @@ def sharded_fused_graph_conv(
 
     @jax.custom_vjp
     def f(vals, xx, ww, bb):
-        return fwd_sharded(rids, cids, vals, chunks, xx, ww, bb)
+        return fwd_sharded(rids, cids, vals, meta, xx, ww, bb)
 
     def fwd(vals, xx, ww, bb):
         y = f(vals, xx, ww, bb)

@@ -1,0 +1,282 @@
+"""Degree-binned hybrid SpMM — MXU-dense hub tiles + rpt-bounded CSR
+remainder, with the inverse row permutation fused into the epilogue
+(DESIGN.md §12; HC-SpMM / Accel-GCN style routing, ISSUE 8).
+
+The CSR row-split kernel (`batched_spmm_csr.py`) bounds its slot loop by
+the per-matrix MAX row degree — one hub row serializes the whole matrix's
+grid step. This kernel splits each matrix by degree instead:
+
+- **sort**: rows are stably argsorted by descending degree, per matrix. The
+  kernel computes in sorted row order; the *inverse* permutation (``rank``)
+  is applied as the last epilogue op, so outputs leave in original row
+  order and callers never see the reordering.
+- **classify**: a row with ``deg >= plan.dmin`` (density ``tau`` of
+  ``m_pad``, threshold inclusive) is a *hub*. Hub rows are scattered into a
+  dense ``(d_pad, m_pad)`` slab outside the kernel and handled by ONE
+  ``dot_general`` on the MXU — ``2·d_pad·m_pad·n_block`` FLOPs per row
+  block instead of a ``max_deg``-trip scatter loop. ``d_pad`` is static and
+  provably sufficient (``nnz_pad // dmin`` bounds the hub count); when it
+  is 0 the kernel takes no slab operand at all, so degenerate inputs
+  (all-empty batches, ``nnz_pad < dmin``) never emit an empty MXU tile
+  group.
+- **bin**: the sparse remainder runs the existing rpt-bounded CSR scatter
+  loop, but over static SUBLANES-aligned bins of the sorted row axis, each
+  with its own SMEM trip bound ``max(rlen)`` *within the bin*. Because rows
+  are degree-sorted, bins are similar-work groups: the fori_loop over a
+  light bin stops after its own (small) max degree instead of the matrix
+  max — and every sparse row's degree is ``< dmin`` by classification, so
+  the worst bin is bounded by ``dmin - 1`` regardless of skew.
+
+The flat ``col_ids``/``values`` arrays stay in CSR (original-row) order;
+only the per-row ``start``/``rlen`` pointers are permuted, so no nnz-sized
+re-sort is paid. Hub rows keep ``rlen_sparse = 0`` — their non-zeros live
+only in the slab, sparse rows only in the CSR arrays (no double counting).
+
+Gradients: the inverse-permute epilogue lives INSIDE the generic
+``batched_spmm`` custom-VJP boundary, so cotangents arrive in original row
+order and the backward needs no re-sort — it reuses the CSR-class backward
+(``bwd_impl_for``), pricing ``dB = Aᵀ·dC`` with Aᵀ's own (unsorted)
+structure. The forward's permutation is a pure reordering of the same f32
+sums, not a different linearization.
+
+``batched_spmm_hybrid_xla`` is the pure-XLA sibling (registry name
+``"hybrid"``): the identical classify/split, expressed as a hub-slab
+``einsum`` plus an ELL remainder whose static width is ``dmin - 1`` — the
+same dense/sparse routing without a Pallas launch, timeable on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.batching import HybridPlan
+from repro.core.formats import (
+    BatchedCOO,
+    coo_to_csr,
+    coo_to_ell,
+    narrow_col_ids,
+    row_degrees,
+)
+from repro.kernels import ref, resolve_interpret
+
+
+def hybrid_operands(row_ids, col_ids, values, nnz, m_pad, plan: HybridPlan):
+    """Trace-safe prep: sort, classify and bin one batch for the kernel.
+
+    Returns ``(rank, start_s, rlen_sparse, rowmax_bins, cid_flat, val_flat,
+    slab)`` where
+
+    - ``rank[b, r]`` is row r's position in matrix b's descending-degree
+      order (the inverse permutation the epilogue applies);
+    - ``start_s``/``rlen_sparse`` are the CSR row pointers *permuted into
+      sorted order* (the flat nnz arrays are NOT re-sorted — the kernel
+      gathers at arbitrary offsets), with hub rows zeroed out of the
+      sparse path;
+    - ``rowmax_bins[b, j]`` is bin j's own trip bound (``max rlen`` within
+      the bin) — the load-balancing decision, as SMEM scalars;
+    - ``slab`` is the ``(batch, d_pad, m_pad)`` dense hub operand, or
+      ``None`` when ``plan.d_pad == 0`` (degenerate guard: no hub can
+      exist, no MXU tile group is built).
+    """
+    a = BatchedCOO(row_ids=row_ids, col_ids=col_ids, values=values,
+                   nnz=nnz, n_rows=jnp.full((row_ids.shape[0],), m_pad,
+                                            jnp.int32))
+    deg = row_degrees(a, m_pad)                          # (batch, m_pad)
+    perm = jnp.argsort(-deg, axis=1, stable=True)        # sorted -> original
+    rank = jnp.argsort(perm, axis=1).astype(jnp.int32)   # original -> sorted
+    csr = coo_to_csr(a, m_pad)
+    start = csr.rpt[:, :-1]
+    rlen = csr.rpt[:, 1:] - csr.rpt[:, :-1]
+    start_s = jnp.take_along_axis(start, perm, axis=1)
+    rlen_s = jnp.take_along_axis(rlen, perm, axis=1)
+    # descending stable sort ⟹ sorted positions [0, n_dense) are EXACTLY the
+    # rows with deg >= dmin (ties at the threshold classify dense)
+    n_dense = jnp.minimum(jnp.sum(deg >= plan.dmin, axis=1),
+                          plan.d_pad).astype(jnp.int32)
+    pos_iota = jnp.arange(m_pad, dtype=jnp.int32)[None, :]
+    rlen_sparse = jnp.where(pos_iota < n_dense[:, None], 0, rlen_s)
+    rowmax_bins = jnp.stack(
+        [jnp.max(rlen_sparse[:, s:e], axis=1) for s, e in plan.bins],
+        axis=1).astype(jnp.int32)                        # (batch, nbins)
+    slab = None
+    if plan.d_pad:
+        def one_slab(rid, cid, val, nnz_b, rank_b, nd):
+            pos = jnp.take(rank_b, jnp.clip(rid, 0, m_pad - 1))
+            ok = (jnp.arange(rid.shape[0]) < nnz_b) & (pos < nd)
+            return jnp.zeros((plan.d_pad + 1, m_pad), val.dtype).at[
+                jnp.where(ok, pos, plan.d_pad), cid
+            ].add(jnp.where(ok, val, 0))[:plan.d_pad]
+
+        slab = jax.vmap(one_slab)(row_ids, col_ids, values, nnz, rank,
+                                  n_dense)
+    return rank, start_s, rlen_sparse, rowmax_bins, csr.col_ids, \
+        csr.values, slab
+
+
+def _kernel(*refs, bins, d_pad: int, has_scale: bool):
+    if has_scale:
+        scale_ref, refs = refs[0], refs[1:]
+    else:
+        scale_ref = None
+    if d_pad:
+        (rowmax_ref, rank_ref, start_ref, rlen_ref, cid_ref, val_ref,
+         slab_ref, b_ref, c_ref) = refs
+    else:
+        (rowmax_ref, rank_ref, start_ref, rlen_ref, cid_ref, val_ref,
+         b_ref, c_ref) = refs
+        slab_ref = None
+    start = start_ref[0]                     # (m_pad,) int32, sorted order
+    rlen = rlen_ref[0]                       # (m_pad,) int32, hubs zeroed
+    cid = cid_ref[0]                         # (nnz_pad,) flat, CSR order
+    val = val_ref[0]
+    bb = b_ref[0]                            # (m_pad, n_block)
+    nnz_pad = cid.shape[0]
+
+    # sparse remainder: the CSR scatter loop, statically unrolled over the
+    # degree-sorted work bins — each bin pays only ITS OWN max degree
+    parts = []
+    for j, (s, e) in enumerate(bins):
+        st = start[s:e]
+        rl = rlen[s:e]
+
+        def body(k, acc, st=st, rl=rl):
+            idx = jnp.minimum(st + k, nnz_pad - 1)
+            live = (k < rl)[:, None]
+            c = jnp.take(cid, idx, axis=0).astype(jnp.int32)
+            rows = jnp.take(bb, c, axis=0).astype(jnp.float32)
+            e_ = jnp.take(val, idx, axis=0).astype(jnp.float32)[:, None]
+            return acc + jnp.where(live, rows * e_, 0.0)
+
+        parts.append(jax.lax.fori_loop(
+            0, rowmax_ref[0, j], body,
+            jnp.zeros((e - s, bb.shape[1]), jnp.float32)))
+    acc = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+    if d_pad:
+        # hub rows: one dense GEMM tile on the MXU replaces up to dmin..m_pad
+        # scatter-loop trips per row
+        dense = jax.lax.dot_general(
+            slab_ref[0].astype(jnp.float32), bb.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        head = acc[:d_pad] + dense
+        acc = head if d_pad == acc.shape[0] else \
+            jnp.concatenate([head, acc[d_pad:]], axis=0)
+
+    # fused epilogue: inverse permutation — out[r] = acc_sorted[rank[r]] —
+    # so the caller sees original row order
+    acc = jnp.take(acc, rank_ref[0], axis=0)
+    if has_scale:
+        acc = acc * scale_ref[0]
+    c_ref[0] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "narrow", "interpret"))
+def batched_spmm_hybrid(
+    row_ids: jax.Array,   # (batch, nnz_pad) int32
+    col_ids: jax.Array,   # (batch, nnz_pad) int32
+    values: jax.Array,    # (batch, nnz_pad) f32/bf16
+    nnz: jax.Array,       # (batch,) int32
+    b: jax.Array,         # (batch, m_pad, n_b)
+    *,
+    plan: HybridPlan,
+    narrow: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    batch, nnz_pad = col_ids.shape
+    m_pad, n_b = b.shape[-2], b.shape[-1]
+    base = plan.spmm
+    assert base.batch == batch and base.m_pad == m_pad and base.n_b == n_b, \
+        plan
+    rank, start_s, rlen_sparse, rowmax_bins, cid_f, val_f, slab = \
+        hybrid_operands(row_ids, col_ids, values, nnz, m_pad, plan)
+    if narrow:
+        cid_f = narrow_col_ids(cid_f, m_pad)
+
+    n_block, p = base.n_block, base.p
+    if n_b % n_block:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, p * n_block - n_b)))
+
+    in_specs = [
+        pl.BlockSpec((1, plan.nbins), lambda i, j: (i, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),   # rank
+        pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),   # start (sorted)
+        pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)),   # rlen (sparse-only)
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, nnz_pad), lambda i, j: (i, 0)),
+    ]
+    operands = [rowmax_bins, rank, start_s, rlen_sparse, cid_f, val_f]
+    if plan.d_pad:
+        in_specs.append(
+            pl.BlockSpec((1, plan.d_pad, m_pad), lambda i, j: (i, 0, 0)))
+        operands.append(slab)
+    in_specs.append(pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)))
+    operands.append(b)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bins=plan.bins, d_pad=plan.d_pad,
+                          has_scale=False),
+        grid=(batch, p),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, p * n_block), b.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[..., :n_b]
+
+
+def batched_spmm_hybrid_xla(a: BatchedCOO, b: jax.Array, m_pad: int, *,
+                            plan: HybridPlan) -> jax.Array:
+    """Pure-XLA sibling (``impl="hybrid"``): the same degree split without a
+    Pallas launch.
+
+    Hub rows (``deg >= plan.dmin``) go through a dense ``(d_pad, m_pad)``
+    slab GEMM; the remainder goes through ELL whose static width is
+    ``dmin - 1`` — sound because every non-hub row has ``deg < dmin`` by
+    classification, so ``coo_to_ell`` can never silently drop a slot. Hub
+    non-zeros are excluded from the ELL build via the ``rid >= m_pad``
+    sentinel rewrite (the documented drop rule of ``coo_to_ell``).
+    """
+    deg = row_degrees(a, m_pad)
+    is_hub = deg >= plan.dmin
+    rid_sp = jax.vmap(
+        lambda rid, hub: jnp.where(
+            jnp.take(hub, jnp.clip(rid, 0, m_pad - 1)), m_pad, rid)
+    )(a.row_ids, is_hub)
+    k_sparse = max(1, plan.dmin - 1)
+    ell = coo_to_ell(dataclasses.replace(a, row_ids=rid_sp), m_pad, k_sparse)
+    out = ref.batched_spmm_ell_ref(ell, b)
+    if not plan.d_pad:
+        # degenerate guard: nnz_pad < dmin ⟹ no row can classify dense —
+        # skip the slab entirely rather than emit an empty GEMM
+        return out
+    # hubs first (stable ⟹ original row order within the hub group), so the
+    # slab row for hub h is its rank among hubs
+    order = jnp.argsort(jnp.where(is_hub, 0, 1).astype(jnp.int32), axis=1,
+                        stable=True)
+    inv = jnp.argsort(order, axis=1)
+    n_dense = jnp.minimum(jnp.sum(is_hub, axis=1), plan.d_pad)
+
+    def one(rid, cid, val, nnz_b, inv_b, nd, rows_idx, bb):
+        pos = jnp.take(inv_b, jnp.clip(rid, 0, m_pad - 1))
+        ok = (jnp.arange(rid.shape[0]) < nnz_b) & (pos < nd)
+        slab = jnp.zeros((plan.d_pad + 1, m_pad), val.dtype).at[
+            jnp.where(ok, pos, plan.d_pad), cid
+        ].add(jnp.where(ok, val, 0))[:plan.d_pad]
+        hub = jnp.einsum("dm,mn->dn", slab, bb,
+                         preferred_element_type=jnp.float32)
+        valid = jnp.arange(plan.d_pad) < nd
+        return jnp.zeros((m_pad + 1, bb.shape[-1]), jnp.float32).at[
+            jnp.where(valid, rows_idx, m_pad)
+        ].add(jnp.where(valid[:, None], hub, 0.0))[:m_pad]
+
+    hub_out = jax.vmap(one)(a.row_ids, a.col_ids, a.values, a.nnz, inv,
+                            n_dense, order[:, :plan.d_pad], b)
+    return (out.astype(jnp.float32) + hub_out).astype(b.dtype)

@@ -39,7 +39,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.batching import CHUNK, BatchPlan, plan_fused_graph_conv
+from repro.core.batching import (
+    CHUNK,
+    BatchPlan,
+    HybridPlan,
+    plan_fused_graph_conv,
+    plan_hybrid,
+)
 from repro.kernels import resolve_interpret
 
 EPILOGUES = ("none", "relu")
@@ -47,7 +53,11 @@ EPILOGUES = ("none", "relu")
 
 def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
             *rest, channels: int, total_chunks: int, epilogue: str,
-            has_residual: bool):
+            has_residual: bool, d_pad: int = 0):
+    rest = list(rest)
+    if d_pad:           # hybrid dispatch (DESIGN.md §12): inverse-perm + slab
+        rank_ref, slab_ref = rest[0], rest[1]
+        rest = rest[2:]
     if has_residual:
         res_ref, c_ref = rest
     else:
@@ -56,6 +66,8 @@ def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
     xx = x_ref[0].astype(jnp.float32)                     # (m_pad, n_in)
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, m_pad), 1)
     acc = jnp.zeros(c_ref.shape[1:], jnp.float32)
+    if d_pad:
+        dacc = jnp.zeros((d_pad, c_ref.shape[2]), jnp.float32)
 
     for ch in range(channels):    # static unroll; channels is small (bond types)
         # feature transform on the MXU — U_ch never leaves VMEM
@@ -63,6 +75,15 @@ def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
             xx, w_ref[ch].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) + b_ref[ch].astype(jnp.float32)[None, :]
+
+        if d_pad:
+            # hub rows: this channel's pre-gathered dense tiles contract
+            # against U_ch on the MXU — no scatter loop for the heavy rows
+            dacc = dacc + jax.lax.dot_general(
+                slab_ref[0, ch].astype(jnp.float32), u,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
 
         def body(i, a, u=u, ch=ch):
             sl = pl.dslice(i * CHUNK, CHUNK)
@@ -83,6 +104,14 @@ def _kernel(chunks_ref, rid_ref, cid_ref, val_ref, x_ref, w_ref, b_ref,
         n_ch = jnp.minimum(chunks_ref[0, ch], total_chunks)
         acc = jax.lax.fori_loop(0, n_ch, body, acc)
 
+    if d_pad:
+        # accumulator is in SORTED row order (hub rows first); merge the MXU
+        # tiles, then the inverse permutation is fused into the epilogue so
+        # outputs leave in the original row order (DESIGN.md §12)
+        head = acc[:d_pad] + dacc
+        acc = head if d_pad == m_pad else jnp.concatenate([head, acc[d_pad:]])
+        acc = jnp.take(acc, rank_ref[0].astype(jnp.int32), axis=0)
+
     if has_residual:
         acc = acc + res_ref[0].astype(jnp.float32)
     if epilogue == "relu":
@@ -100,14 +129,23 @@ def fused_forward(
     w: jax.Array,           # (channels, n_in, n_out)
     bias: jax.Array,        # (channels, n_out)
     residual: jax.Array | None = None,   # (batch, m_pad, n_out)
+    rank: jax.Array | None = None,       # (batch, m_pad) int32 — hybrid inverse perm
+    slab: jax.Array | None = None,       # (batch, channels, d_pad, m_pad) hub tiles
     *,
     plan: BatchPlan,
     epilogue: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Raw fused forward (no VJP) — shared by the local custom-VJP wrapper and
-    the mesh-sharded per-shard dispatch (``distributed/spmm.py``)."""
+    the mesh-sharded per-shard dispatch (``distributed/spmm.py``).
+
+    ``rank``/``slab`` (set together by :func:`fused_hybrid_forward`) switch on
+    the hybrid dispatch: per-channel hub tiles are contracted on the MXU and
+    the accumulator — built in degree-sorted row order — is inverse-permuted
+    before the residual/ReLU epilogue."""
     interpret = resolve_interpret(interpret)
+    assert (rank is None) == (slab is None), "rank/slab must be set together"
+    d_pad = 0 if slab is None else slab.shape[2]
     if epilogue not in EPILOGUES:
         raise ValueError(f"epilogue={epilogue!r}; expected one of {EPILOGUES}")
     batch, channels, nnz_pad = row_ids.shape
@@ -146,6 +184,11 @@ def fused_forward(
         pl.BlockSpec((channels, n_block), lambda i, j: (0, j)),
     ]
     operands = [chunks.astype(jnp.int32), row_ids, col_ids, values, x, w, bias]
+    if d_pad:
+        in_specs.append(pl.BlockSpec((1, m_pad), lambda i, j: (i, 0)))
+        in_specs.append(pl.BlockSpec((1, channels, d_pad, m_pad),
+                                     lambda i, j: (i, 0, 0, 0)))
+        operands += [rank.astype(jnp.int32), slab]
     if residual is not None:
         in_specs.append(pl.BlockSpec((1, m_pad, n_block),
                                      lambda i, j: (i, 0, j)))
@@ -154,7 +197,8 @@ def fused_forward(
     out = pl.pallas_call(
         functools.partial(
             _kernel, channels=channels, total_chunks=total_chunks,
-            epilogue=epilogue, has_residual=residual is not None),
+            epilogue=epilogue, has_residual=residual is not None,
+            d_pad=d_pad),
         grid=(batch, p),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_pad, n_block), lambda i, j: (i, 0, j)),
@@ -168,6 +212,103 @@ def runtime_chunks(nnz: jax.Array) -> jax.Array:
     """Trace-safe skew-aware chunk counts: ``ceil(nnz / CHUNK)`` per
     (sample × channel), from the BatchedCOO ``nnz`` metadata."""
     return ((nnz + CHUNK - 1) // CHUNK).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "hplan", "epilogue", "interpret"))
+def fused_hybrid_forward(
+    row_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    col_ids: jax.Array,     # (batch, channels, nnz_pad) int32
+    values: jax.Array,      # (batch, channels, nnz_pad)
+    nnz: jax.Array,         # (batch, channels) int32 — true nnz per channel
+    x: jax.Array,           # (batch, m_pad, n_in)
+    w: jax.Array,           # (channels, n_in, n_out)
+    bias: jax.Array,        # (channels, n_out)
+    residual: jax.Array | None = None,
+    *,
+    plan: BatchPlan,
+    hplan: HybridPlan,
+    epilogue: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The degree-binned hybrid dispatch folded into the fused megakernel
+    (DESIGN.md §12): fully traced prep, one ``pallas_call``.
+
+    Hub-ness is a property of the OUTPUT row across the whole layer, so rows
+    are classified by their degree summed over edge channels. Hub rows' edges
+    leave the one-hot scatter stream entirely — gathered into per-channel
+    ``(d_pad, m_pad)`` dense tiles contracted on the MXU — and the surviving
+    sparse slots are compacted to the front of each channel so the skew-aware
+    chunk loop shrinks by exactly the work the MXU absorbed. Sparse slots
+    target the degree-SORTED row position; the kernel merges the MXU head and
+    inverse-permutes the accumulator before the epilogue, so outputs (and
+    therefore cotangents) stay in original row order and the backward runs on
+    the ORIGINAL arrays (``fused_bwd`` unchanged — exact by bilinearity).
+
+    The layer-level padding semantics is the §IV-C VALUE invariant (padded
+    slots carry value 0.0 and may sit ANYWHERE the visited chunks cover, not
+    just past the ``nnz`` prefix — the channel streams are slot-permuted
+    views), so slots are classified live by ``value != 0``, exactly the
+    property that makes them inert in the plain kernel. Re-targeted hub and
+    dead slots map to the ``m_pad`` row-id sentinel, structurally inert in
+    the one-hot.
+    """
+    interpret = resolve_interpret(interpret)
+    batch, channels, nnz_pad = row_ids.shape
+    m_pad = x.shape[1]
+    assert hplan.spmm.m_pad == m_pad, (hplan, x.shape)
+    if hplan.d_pad == 0:
+        # degenerate split (layer nnz budget below dmin): no row can be a
+        # hub, so the MXU tile group would be empty — plain fused kernel
+        return fused_forward(row_ids, col_ids, values, runtime_chunks(nnz),
+                             x, w, bias, residual, plan=plan,
+                             epilogue=epilogue, interpret=interpret)
+
+    f32 = jnp.float32
+    live = values != 0                                       # §IV-C: by value
+    rid_c = jnp.clip(row_ids.astype(jnp.int32), 0, m_pad - 1)
+    cid_c = jnp.clip(col_ids.astype(jnp.int32), 0, m_pad - 1)
+
+    def sample_deg(rids_s, live_s):
+        tgt = jnp.where(live_s, rids_s, m_pad).reshape(-1)
+        return jnp.zeros((m_pad + 1,), jnp.int32).at[tgt].add(1)[:m_pad]
+
+    deg = jax.vmap(sample_deg)(rid_c, live)                  # (batch, m_pad)
+    perm = jnp.argsort(-deg, axis=1, stable=True)
+    rank = jnp.argsort(perm, axis=1).astype(jnp.int32)       # inverse perm
+    n_dense = jnp.minimum(
+        jnp.sum((deg >= hplan.dmin).astype(jnp.int32), axis=1),
+        hplan.d_pad).astype(jnp.int32)                       # (batch,)
+
+    # sorted row position of every slot; hub slots are the ones landing in
+    # the first n_dense sorted rows. Routing ignores liveness: dead slots
+    # carry value 0.0, so wherever they land they contribute nothing.
+    pos = jax.vmap(lambda r, i: r[i])(
+        rank, rid_c.reshape(batch, -1)).reshape(rid_c.shape)
+    is_hub = pos < n_dense[:, None, None]
+
+    rid_m = jnp.where(is_hub, m_pad, pos)
+    # compact live sparse slots to the front so runtime chunk counts shrink;
+    # the tail (hub slots, dead slots) stays inert — by sentinel or by value
+    live_sp = live & ~is_hub
+    order = jnp.argsort(jnp.where(live_sp, 0, 1).astype(jnp.int32),
+                        axis=2, stable=True)
+    rid_s = jnp.take_along_axis(rid_m, order, axis=2)
+    cid_s = jnp.take_along_axis(col_ids, order, axis=2)
+    val_s = jnp.take_along_axis(values, order, axis=2)
+    nnz_sparse = jnp.sum(live_sp.astype(jnp.int32), axis=2)
+
+    def one_slab(pos_sc, hub_sc, cid_sc, val_sc):
+        d = jnp.where(hub_sc, pos_sc, hplan.d_pad)
+        return jnp.zeros((hplan.d_pad + 1, m_pad), f32).at[d, cid_sc].add(
+            jnp.where(hub_sc, val_sc.astype(f32), 0.0))[:hplan.d_pad]
+
+    slab = jax.vmap(jax.vmap(one_slab))(
+        pos, is_hub, cid_c, values).astype(values.dtype)
+
+    return fused_forward(rid_s, cid_s, val_s, runtime_chunks(nnz_sparse),
+                         x, w, bias, residual, rank, slab, plan=plan,
+                         epilogue=epilogue, interpret=interpret)
 
 
 def fused_bwd(rids, cids, values, x, w, bias, y, dy, *,
@@ -253,13 +394,24 @@ def fused_graph_conv(
             "megakernel does not batch matrices this large — use the unfused "
             "graph_conv_batched fallback")
     chunks = runtime_chunks(nnz)
+    from repro.autotune.cost_model import precision_of
     from repro.kernels.ops import bwd_impl_for
     bwd_impl = bwd_impl_for(impl) if not interpret else "ref"
     has_res = residual is not None
     rids, cids = row_ids, col_ids
+    hybrid = precision_of(impl)[0] == "fused_hybrid"
+    if hybrid:
+        # hub-ness is judged on the layer's whole edge budget (all channels)
+        hplan = plan_hybrid(batch=batch, m_pad=plan.m_pad, n_b=w.shape[-1],
+                            nnz_pad=channels * nnz_pad,
+                            itemsize=x.dtype.itemsize)
 
     @jax.custom_vjp
     def f(values, x, w, bias, residual):
+        if hybrid:
+            return fused_hybrid_forward(
+                rids, cids, values, nnz, x, w, bias, residual, plan=plan,
+                hplan=hplan, epilogue=epilogue, interpret=interpret)
         return fused_forward(rids, cids, values, chunks, x, w, bias, residual,
                              plan=plan, epilogue=epilogue, interpret=interpret)
 

@@ -50,6 +50,10 @@ from repro.kernels.batched_gemm import batched_gemm
 from repro.kernels.batched_spmm_coo import batched_spmm_coo
 from repro.kernels.batched_spmm_csr import batched_spmm_csr
 from repro.kernels.batched_spmm_ell import batched_spmm_ell
+from repro.kernels.batched_spmm_hybrid import (
+    batched_spmm_hybrid,
+    batched_spmm_hybrid_xla,
+)
 
 # "fused" is the graph-conv layer megakernel (kernels/fused_graph_conv.py):
 # it is selectable wherever a layer-level workload is being resolved
@@ -59,8 +63,8 @@ from repro.kernels.batched_spmm_ell import batched_spmm_ell
 # registry entries: each runs its base impl's execution structure with a
 # cheaper storage policy and an f32 accumulator.
 IMPLS = ("auto", "ref", "ell", "pallas_ell", "csr", "pallas_csr",
-         "pallas_coo", "dense", "pallas_gemm", "loop",
-         "fused") + tuple(PRECISION_IMPLS)
+         "pallas_coo", "hybrid", "pallas_hybrid", "dense", "pallas_gemm",
+         "loop", "fused", "fused_hybrid") + tuple(PRECISION_IMPLS)
 
 # The static g-SpMM axes (DESIGN.md §11). ``copy_lhs`` ignores the edge
 # value entirely (pure neighborhood aggregation, e.g. R-GCN's mean).
@@ -84,12 +88,23 @@ _IMPL_NOTES = {
                   "rpt-bounded dynamic slot loop — DESIGN.md §9)",
     "pallas_coo": "Batched SWA-SparseTensor analogue (one-hot-scatter "
                   "kernel)",
+    "hybrid": "pure-XLA degree-split hybrid: dense hub-row slab GEMM + "
+              "ELL remainder bounded by the hub threshold (the "
+              "HC-SpMM-style routing without the Pallas kernel)",
+    "pallas_hybrid": "degree-binned hybrid row dispatch: MXU-dense hub "
+                     "tiles + rpt-bounded CSR remainder over sorted work "
+                     "bins, inverse row permutation fused into the "
+                     "epilogue (DESIGN.md §12)",
     "dense": "densify + batched GEMM (the cuBLAS gemmBatched baseline)",
     "pallas_gemm": "densify + MXU Pallas batched GEMM",
     "loop": "the NON-batched baseline: one sequential SpMM per sample, "
             "reproducing the paper's per-sample-kernel-launch structure",
     "fused": "graph-conv LAYER megakernel (needs W and bias; raises here — "
              "use graph_conv_batched, DESIGN.md §7)",
+    "fused_hybrid": "graph-conv LAYER megakernel with degree-binned hybrid "
+                    "dispatch: per-channel dense hub slabs + compacted COO "
+                    "scatter chunks (needs W and bias; raises here — use "
+                    "graph_conv_batched, DESIGN.md §12)",
 }
 _POLICY_NOTES = {
     "bf16": "bfloat16 storage, f32 in-kernel accumulate (DESIGN.md §10)",
@@ -257,6 +272,19 @@ def _forward_base(row_ids, col_ids, nnz, values, b, *, impl, base, k_pad,
     if base in ("csr", "pallas_csr"):
         return _csr_forward(coo_to_csr(a, m_pad), b, impl=base,
                             interpret=interpret, scale=scale, narrow=narrow)
+    if base in ("hybrid", "pallas_hybrid"):
+        assert scale is None, "hybrid has no i8 variant"
+        hplan = batching.plan_hybrid(
+            batch=batch, m_pad=m_pad, n_b=n_b, nnz_pad=row_ids.shape[1],
+            itemsize=b.dtype.itemsize)
+        if base == "hybrid":
+            return batched_spmm_hybrid_xla(a, b, m_pad, plan=hplan)
+        if hplan.spmm.case == 3:
+            # Paper case 3: same per-sample fallback as the other kernels.
+            return ref.batched_spmm_coo_ref(a, b, m_pad)
+        return batched_spmm_hybrid(row_ids, col_ids, values, nnz, b,
+                                   plan=hplan, narrow=narrow,
+                                   interpret=interpret)
     if base in ("pallas_ell", "ell"):
         if k_pad is None:
             raise ValueError(f"{impl} requires k_pad (max nnz/row)")
@@ -378,6 +406,7 @@ _VARIANT_BWD = {
     "pallas_ell_i8": "pallas_coo",
     "pallas_csr_i8": "pallas_csr",
     "fused_bf16": "pallas_coo_bf16",
+    "pallas_hybrid_bf16": "pallas_csr_bf16",
 }
 
 
@@ -390,12 +419,24 @@ def bwd_impl_for(impl: str) -> str:
     and the mesh-sharded VJP. The fused megakernel's dU = Aᵀ·dZ is itself a
     plain batched SpMM, so it takes the same COO-class backward. Precision
     variants map first (before the pallas catch-all) via ``_VARIANT_BWD``.
+
+    The hybrid class maps to the CSR class (its sparse remainder IS the
+    rpt-bounded CSR loop): the forward's inverse-permute epilogue sits
+    inside the custom-VJP boundary, so cotangents arrive in ORIGINAL row
+    order and the backward permutes nothing — it must not re-sort Aᵀ by
+    *its* degrees, because dB = Aᵀ·dC is exact in any evaluation order and
+    re-deriving a permutation for the transpose would pay the sort twice
+    for no bound on Aᵀ's rows.
     """
     if impl in _VARIANT_BWD:
         return _VARIANT_BWD[impl]
     if impl in ("csr", "pallas_csr"):
         return impl
-    if impl.startswith("pallas") or impl == "fused":
+    if impl == "hybrid":
+        return "csr"
+    if impl == "pallas_hybrid":
+        return "pallas_csr"
+    if impl.startswith("pallas") or impl.startswith("fused"):
         return "pallas_coo"
     return impl if impl in ("ref", "loop", "dense") else "ref"
 
@@ -641,7 +682,7 @@ def batched_spmm(
     split over ``mesh_axis`` and the per-shard kernels run under shard_map,
     with ``impl="auto"`` resolved against the per-shard workload.
     """
-    if precision_of(impl)[0] == "fused":
+    if precision_of(impl)[0].startswith("fused"):
         raise ValueError(
             f"impl={impl!r} is the graph-conv LAYER megakernel (it needs W "
             "and bias, not a bare dense operand) — call "

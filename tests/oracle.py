@@ -44,11 +44,14 @@ TOLS = {
 }
 
 # Every concrete SpMM-shaped impl: not the resolver ("auto"), not the
-# layer-op class ("fused"/"fused_bf16" — exercised by layer_cases below).
+# layer-op class ("fused"/"fused_bf16"/"fused_hybrid" — exercised by
+# layer_cases below).
 CONCRETE_SPMM_IMPLS = tuple(
-    i for i in IMPLS if i != "auto" and precision_of(i)[0] != "fused")
+    i for i in IMPLS if i != "auto"
+    and not precision_of(i)[0].startswith("fused"))
 
-LAYER_IMPLS = tuple(i for i in IMPLS if precision_of(i)[0] == "fused")
+LAYER_IMPLS = tuple(
+    i for i in IMPLS if precision_of(i)[0].startswith("fused"))
 
 
 def spmm_cases():

@@ -96,7 +96,8 @@ def test_all_impls_agree():
     coo, m_pad, b, want = _case(3, 6, (10, 60), (1, 5), 96, jnp.float32)
     outs = {}
     for impl in ("ref", "loop", "dense", "pallas_gemm", "pallas_coo",
-                 "pallas_ell", "ell", "csr", "pallas_csr"):
+                 "pallas_ell", "ell", "csr", "pallas_csr", "hybrid",
+                 "pallas_hybrid"):
         outs[impl] = np.asarray(
             batched_spmm(coo, b, impl=impl, k_pad=16))
     for impl, got in outs.items():
@@ -218,11 +219,18 @@ def test_bwd_impl_mapping_pinned():
         "pallas_gemm": "pallas_coo",
         "loop": "loop",
         "fused": "pallas_coo",  # dU = Aᵀ·dZ is a plain batched SpMM
+        "fused_hybrid": "pallas_coo",   # same: bwd runs on the ORIGINAL COO
+        # hybrid backward: the epilogue's inverse permutation lives INSIDE
+        # the custom_vjp boundary, so cotangents arrive in original row
+        # order and the backward is the plain CSR class — no re-sort
+        "hybrid": "csr",
+        "pallas_hybrid": "pallas_csr",
         # bf16 variants keep the class (and policy) through the backward
         "ell_bf16": "ref",
         "csr_bf16": "csr_bf16",
         "pallas_ell_bf16": "pallas_coo_bf16",
         "pallas_csr_bf16": "pallas_csr_bf16",
+        "pallas_hybrid_bf16": "pallas_csr_bf16",
         "pallas_coo_bf16": "pallas_coo_bf16",
         "fused_bf16": "pallas_coo_bf16",
         # i8 backward is full-precision straight-through: the residuals hold
