@@ -185,11 +185,20 @@ def _check_precision_rows(path, rows) -> list[str]:
     return errors
 
 
+def _reject_non_finite(token: str):
+    # json.loads only calls parse_constant for NaN/Infinity/-Infinity —
+    # Python-only extensions that strict JSON parsers reject; a bench file
+    # carrying one is unreadable to non-Python tooling downstream
+    raise ValueError(f"non-finite JSON literal {token!r} "
+                     "(write_bench_json must serialize these as null)")
+
+
 def check_file(path: pathlib.Path) -> list[str]:
     errors: list[str] = []
     try:
-        doc = json.loads(path.read_text())
-    except (OSError, json.JSONDecodeError) as e:
+        doc = json.loads(path.read_text(),
+                         parse_constant=_reject_non_finite)
+    except (OSError, ValueError) as e:
         return [f"{path.name}: unreadable ({e})"]
     for key in REQUIRED_TOP:
         if key not in doc:

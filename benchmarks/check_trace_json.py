@@ -1,0 +1,96 @@
+"""CI sanity gate for exported Chrome-trace JSON (``--trace`` artifacts).
+
+A trace that fails here won't load in Perfetto / chrome://tracing — the
+whole point of exporting one. Checks, per file:
+
+1. **Strict JSON** — bare ``NaN``/``Infinity`` literals (Python extensions)
+   are rejected; the exporter sanitizes args to null, so one appearing
+   means a new emitter bypassed ``sanitize_json``.
+2. **Schema** — a top-level ``traceEvents`` list, NON-empty (an empty trace
+   from a telemetry-enabled run means the instrumentation silently
+   detached); every event carries ``name``/``ph``/``ts``/``pid``/``tid``, a
+   known phase (``X``/``i``/``C``), numeric finite ``ts``, and — for
+   complete spans — a numeric non-negative ``dur``.
+
+Exit code 1 with one line per problem; silent 0 otherwise.
+
+    PYTHONPATH=src python -m benchmarks.check_trace_json trace.json [...]
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+
+REQUIRED_EVENT = ("name", "ph", "ts", "pid", "tid")
+KNOWN_PHASES = {"X", "i", "C"}
+
+
+def _reject_non_finite(token: str):
+    raise ValueError(f"non-finite JSON literal {token!r} "
+                     "(the trace exporter must sanitize args to null)")
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    try:
+        doc = json.loads(path.read_text(),
+                         parse_constant=_reject_non_finite)
+    except (OSError, ValueError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path.name}: no top-level traceEvents key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{path.name}: traceEvents is not a list"]
+    if not events:
+        return [f"{path.name}: traceEvents is EMPTY — telemetry was on but "
+                "nothing recorded a span"]
+    errors: list[str] = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"{path.name}: traceEvents[{i}] is not an object")
+            continue
+        missing = [k for k in REQUIRED_EVENT if k not in ev]
+        if missing:
+            errors.append(
+                f"{path.name}: traceEvents[{i}] ({ev.get('name')!r}) "
+                f"missing {missing}")
+            continue
+        if ev["ph"] not in KNOWN_PHASES:
+            errors.append(
+                f"{path.name}: traceEvents[{i}] ({ev['name']!r}) unknown "
+                f"phase {ev['ph']!r} (expected one of {sorted(KNOWN_PHASES)})")
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errors.append(
+                f"{path.name}: traceEvents[{i}] ({ev['name']!r}) "
+                f"non-finite ts={ts!r}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if (not isinstance(dur, (int, float)) or not math.isfinite(dur)
+                    or dur < 0):
+                errors.append(
+                    f"{path.name}: traceEvents[{i}] ({ev['name']!r}) "
+                    f"complete span with bad dur={dur!r}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("check_trace_json: no trace files given", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for p in argv:
+        errors.extend(check_file(pathlib.Path(p)))
+    for e in errors:
+        print(f"check_trace_json: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_trace_json: {len(argv)} file(s) OK "
+              f"({', '.join(pathlib.Path(p).name for p in argv)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

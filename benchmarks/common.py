@@ -55,7 +55,14 @@ def write_bench_json(suite: str, *, start: int = 0,
                      path: pathlib.Path | None = None) -> pathlib.Path:
     """Persist rows[start:] as ``BENCH_<suite>.json`` at the repo root —
     machine-readable across PRs (name/us_per_call/derived per row, plus any
-    ``extra`` structured payload a harness wants to attach)."""
+    ``extra`` structured payload a harness wants to attach).
+
+    STRICT JSON: Python's default ``json.dumps`` emits bare ``NaN``/
+    ``Infinity`` literals (not JSON — strict parsers and most non-Python
+    tooling reject the file), so non-finite floats are serialized as
+    ``null`` and ``allow_nan=False`` guarantees none slip through."""
+    from repro.observability import sanitize_json
+
     path = path or REPO_ROOT / f"BENCH_{suite}.json"
     payload = {
         "suite": suite,
@@ -64,5 +71,6 @@ def write_bench_json(suite: str, *, start: int = 0,
     }
     if extra:
         payload.update(extra)
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    path.write_text(json.dumps(sanitize_json(payload), indent=2,
+                               sort_keys=True, allow_nan=False) + "\n")
     return path

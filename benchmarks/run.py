@@ -80,7 +80,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny shapes, SpMM suites only")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="enable telemetry (REPRO_TELEMETRY) for the run and "
+                         "export the span buffer as Chrome-trace JSON — "
+                         "loads in Perfetto / chrome://tracing")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.observability import set_enabled
+
+        set_enabled(True)
 
     header()
     if args.smoke:
@@ -120,7 +129,13 @@ def main() -> None:
         start = results_snapshot()
         extra = None
         try:
-            out = fn()
+            if args.trace:
+                from repro.observability import TRACER
+
+                with TRACER.span(f"suite/{name}", cat="bench"):
+                    out = fn()
+            else:
+                out = fn()
             if name == "serve" and isinstance(out, dict):
                 extra = {"graph_sweep": out}
         except Exception:  # noqa: BLE001
@@ -132,6 +147,11 @@ def main() -> None:
         if persist:
             path = write_bench_json(name, start=start, extra=extra)
             print(f"wrote {path}", file=sys.stderr)
+    if args.trace:
+        from repro.observability import default_auditor, export_chrome_trace
+
+        print(f"wrote {export_chrome_trace(args.trace)}", file=sys.stderr)
+        print(default_auditor().format_report(), file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

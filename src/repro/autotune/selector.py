@@ -81,6 +81,8 @@ class Decision:
     scores: tuple[tuple[str, float], ...]  # model ranking, cheapest first
     source: str                     # "model" | "cache" | "forced"
     reason: str                     # one-line human-readable justification
+    workload: Workload | None = None  # the shape key this decision resolved
+                                      # (telemetry/regret audit provenance)
 
 
 def forced_decision(w: Workload, impl: str, *, note: str = "") -> Decision:
@@ -97,7 +99,7 @@ def forced_decision(w: Workload, impl: str, *, note: str = "") -> Decision:
         plan = spmm_plan(w, impl)
     return Decision(
         impl=impl, kind=KINDS.get(impl, impl), case=plan.case, plan=plan,
-        scores=(), source="forced",
+        scores=(), source="forced", workload=w,
         reason=f"caller pinned impl={impl!r}{note}")
 
 
@@ -115,7 +117,7 @@ def select_impl(
         plan = spmm_plan(w, "ref")
         return Decision(
             impl="ref", kind="scatter", case=3, plan=plan, scores=scores,
-            source="forced",
+            source="forced", workload=w,
             reason=(f"m_pad={w.m_pad} > LARGE_M: paper case 3 — batching "
                     "does not pay, per-sample scatter-add fallback"),
         )
@@ -126,7 +128,7 @@ def select_impl(
             plan = spmm_plan(w, measured)   # the plan this impl will run
             return Decision(
                 impl=measured, kind=KINDS[measured], case=plan.case,
-                plan=plan, scores=scores, source="cache",
+                plan=plan, scores=scores, source="cache", workload=w,
                 reason=f"measured winner for key {w.key()} (tuning cache)",
             )
     impl, est = scores[0]
@@ -135,7 +137,7 @@ def select_impl(
         if len(scores) > 1 else ""
     return Decision(
         impl=impl, kind=KINDS[impl], case=plan.case, plan=plan,
-        scores=scores, source="model",
+        scores=scores, source="model", workload=w,
         reason=f"cost model: {impl} @ {est:.2e}s (case {plan.case}, "
                f"p={plan.p}){runner_up}",
     )
@@ -160,7 +162,7 @@ def select_graph_conv_impl(
         plan = spmm_plan(w, "ref")
         return Decision(
             impl="ref", kind="scatter", case=3, plan=plan, scores=scores,
-            source="forced",
+            source="forced", workload=w,
             reason=(f"m_pad={w.m_pad} > LARGE_M: paper case 3 — neither "
                     "batching nor fusion pays, per-sample scatter-add "
                     "fallback"),
@@ -172,7 +174,7 @@ def select_graph_conv_impl(
             plan = _layer_plan(w, measured)
             return Decision(
                 impl=measured, kind=KINDS[measured], case=plan.case,
-                plan=plan, scores=scores, source="cache",
+                plan=plan, scores=scores, source="cache", workload=w,
                 reason=f"measured winner for key {w.key()} (tuning cache)",
             )
     impl, est = scores[0]
@@ -181,7 +183,7 @@ def select_graph_conv_impl(
         if len(scores) > 1 else ""
     return Decision(
         impl=impl, kind=KINDS[impl], case=plan.case, plan=plan,
-        scores=scores, source="model",
+        scores=scores, source="model", workload=w,
         reason=f"layer cost model: {impl} @ {est:.2e}s "
                f"(channels={w.channels}, case {plan.case}){runner_up}",
     )

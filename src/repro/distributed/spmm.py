@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.formats import BatchedCOO
 from repro.kernels import resolve_interpret
+from repro.observability import trace as obs_trace
 
 __all__ = [
     "pad_batch",
@@ -145,9 +146,10 @@ def sharded_batched_spmm(
 
     batch = b.shape[0]
     a, b, pad = pad_batch(a, b, n)
-    concrete = resolve_sharded_impl(
+    decision = resolve_sharded_impl(
         a, b, mesh, axis=axis, impl=impl, k_pad=k_pad,
-        interpret=interpret, precision=precision).impl
+        interpret=interpret, precision=precision)
+    concrete = decision.impl
 
     spec = P(axis)      # dim-0 (batch) sharding for every operand
     row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
@@ -189,7 +191,19 @@ def sharded_batched_spmm(
         return bwd_sharded(row_ids, col_ids, nnz, values, bb, dc)
 
     f.defvjp(fwd, bwd)
-    out = f(a.values, b)
+    if obs_trace.enabled():
+        # distributed-layer span (DESIGN.md §13): the per-SHARD workload key
+        # is the decision's provenance — the same key the regret auditor and
+        # tuning cache use for this dispatch's shapes
+        w = decision.workload
+        with obs_trace.TRACER.span(
+                f"sharded_spmm/{concrete}", cat="kernel",
+                args={"impl": concrete, "source": decision.source,
+                      "n_shards": n, "padded": bool(pad),
+                      "key": None if w is None else w.key()}):
+            out = f(a.values, b)
+    else:
+        out = f(a.values, b)
     return out[:batch] if pad else out
 
 

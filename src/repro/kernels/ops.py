@@ -23,6 +23,7 @@ subset (``autotune.GSPMM_IMPLS``) with explicit padding masks.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,7 @@ from repro.autotune.cost_model import (
     precision_of,
     supports_gspmm,
 )
+from repro.observability import trace as obs_trace
 from repro.core import batching
 from repro.core.formats import (
     BatchedCOO,
@@ -391,6 +393,54 @@ def _gspmm_forward(row_ids, col_ids, nnz, values, b, *, impl, k_pad,
         f"unknown g-SpMM impl {impl!r}; expected one of {GSPMM_IMPLS}")
 
 
+def _traced_dispatch(f, values, b, *, impl, decision, workload):
+    """Run one dispatch under a telemetry span (DESIGN.md §13).
+
+    Only reached when ``observability.enabled()`` — the hot path pays a
+    single predicate otherwise. The span carries the workload geometry, the
+    auto-decision provenance, and the cost model's *predicted* seconds and
+    minimum HBM bytes, so a trace viewer (and the regret auditor) can line
+    predicted up against measured. Eager (non-traced) dispatches also feed
+    the default regret auditor's online calibration stream; traced calls
+    record the span (trace-time wall) but skip the auditor — a trace is not
+    an execution.
+    """
+    from repro.autotune.cost_model import estimate
+    from repro.observability.regret import default_auditor
+
+    pred = dict(decision.scores).get(impl) if decision is not None else None
+    if pred is None:
+        try:
+            pred = estimate(workload, impl)
+        except ValueError:
+            pred = None
+        if pred == float("inf"):
+            pred = None
+    it = workload.itemsize
+    # impl-independent floor: value+index slots once, B and C once each
+    pred_bytes = (workload.batch * workload.nnz_pad * (it + 8)
+                  + 2 * workload.batch * workload.m_pad * workload.n_b * it)
+    args = {
+        "impl": impl, "key": workload.key(), "batch": workload.batch,
+        "m_pad": workload.m_pad, "nnz_pad": workload.nnz_pad,
+        "k_pad": workload.k_pad, "n_b": workload.n_b,
+        "dtype": workload.dtype, "op": workload.op,
+        "reduce": workload.reduce, "predicted_s": pred,
+        "predicted_bytes": pred_bytes,
+    }
+    if decision is not None:
+        args["source"] = decision.source
+        args["case"] = decision.case
+    eager = not isinstance(values, jax.core.Tracer)
+    t0 = time.perf_counter()
+    with obs_trace.TRACER.span(f"spmm/{impl}", cat="kernel", args=args):
+        out = f(values, b)
+    if eager and pred is not None:
+        default_auditor().record(workload.key(), impl, predicted_s=pred,
+                                 measured_s=time.perf_counter() - t0)
+    return out
+
+
 _VARIANT_BWD = {
     # bf16 forwards keep a bf16-class backward (grads accumulate f32
     # in-kernel, cast on the way out); ELL-class forwards fall to the COO
@@ -621,9 +671,13 @@ def batched_gspmm(
         return sharded_batched_gspmm(a, b, op=op, reduce=reduce,
                                      mesh=mesh, axis=mesh_axis, impl=impl,
                                      k_pad=k_pad, interpret=interpret)
-    if impl == "auto":
-        impl = resolve_gspmm_impl(a, b, op=op, reduce=reduce, k_pad=k_pad,
-                                  interpret=interpret).impl
+    tele = obs_trace.enabled()
+    gdecision = None
+    if impl == "auto" or tele:
+        gdecision = resolve_gspmm_impl(a, b, op=op, reduce=reduce,
+                                       impl=impl, k_pad=k_pad,
+                                       interpret=interpret)
+        impl = gdecision.impl
     if not supports_gspmm(impl):
         raise ValueError(
             f"impl {impl!r} cannot run g-SpMM (op={op!r}, reduce={reduce!r});"
@@ -651,6 +705,10 @@ def batched_gspmm(
         return dval, db
 
     f.defvjp(fwd, bwd)
+    if tele and gdecision is not None and gdecision.workload is not None:
+        return _traced_dispatch(f, a.values, b, impl=impl,
+                                decision=gdecision,
+                                workload=gdecision.workload)
     return f(a.values, b)
 
 
@@ -695,9 +753,14 @@ def batched_spmm(
         return sharded_batched_spmm(a, b, mesh=mesh, axis=mesh_axis,
                                     impl=impl, k_pad=k_pad,
                                     interpret=interpret, precision=precision)
-    if impl == "auto":
-        impl = resolve_impl(a, b, impl="auto", k_pad=k_pad,
-                            interpret=interpret, precision=precision).impl
+    tele = obs_trace.enabled()
+    decision = None
+    if impl == "auto" or tele:
+        # telemetry also resolves CONCRETE impls (a forced Decision) so the
+        # span carries the same auditable plan/case/workload provenance
+        decision = resolve_impl(a, b, impl=impl, k_pad=k_pad,
+                                interpret=interpret, precision=precision)
+        impl = decision.impl
 
     row_ids, col_ids, nnz = a.row_ids, a.col_ids, a.nnz
 
@@ -720,6 +783,10 @@ def batched_spmm(
         return dval, db.astype(b.dtype)
 
     f.defvjp(fwd, bwd)
+    if tele and decision is not None and decision.workload is not None:
+        return _traced_dispatch(f, a.values, b, impl=impl,
+                                decision=decision,
+                                workload=decision.workload)
     return f(a.values, b)
 
 

@@ -23,6 +23,7 @@ tier geometry (tests/test_scheduler.py asserts exactly that).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Sequence
@@ -100,6 +101,15 @@ class Scheduler:
 
     ``mesh=`` flows to every tier engine, so each wave spans the device mesh
     exactly as ``GraphServeEngine(mesh=...)`` waves do (DESIGN.md §6).
+
+    Telemetry (DESIGN.md §13): the request lifecycle —
+    arrival → admit → dispatch → finish — lands in the span tracer as
+    instants plus one complete span per request and per wave, stamped from
+    the SCHEDULER's clock (virtual or wall) on the shared ``tid="clock"``
+    track, with queue-depth counter samples at every admit/dispatch.
+    ``telemetry=False`` silences the trace feed; ``registry=`` hands
+    :class:`ServeMetrics` a shared metrics registry (plus ``instance``
+    label) instead of its own.
     """
 
     def __init__(
@@ -114,7 +124,11 @@ class Scheduler:
         service_model: Callable[[GeometryTier, int], float] | None = None,
         engine_factory: Callable[[GeometryTier], GraphServeEngine]
         | None = None,
+        telemetry: bool = True,
+        registry=None,
+        instance: str = "default",
     ):
+        from repro.observability import TRACER
         self.config = config or SchedulerConfig()
         if self.config.bn_mode != cfg.bn_mode:
             cfg = dataclasses.replace(cfg, bn_mode=self.config.bn_mode)
@@ -135,7 +149,12 @@ class Scheduler:
         self.queue = AdmissionQueue()
         self.buckets: dict[GeometryTier, collections.deque[PendingRequest]]
         self.buckets = {}
-        self.metrics = ServeMetrics()
+        self.telemetry = telemetry
+        self.tracer = TRACER
+        self._calibrated: set[GeometryTier] = set()
+        self.metrics = ServeMetrics(
+            registry=registry,
+            labels=None if registry is None else {"instance": instance})
         # engine_factory lets several schedulers share warm engines (one
         # compile per geometry across e.g. a benchmark's policy variants);
         # a custom factory owns the engines' cfg/numerics
@@ -155,9 +174,18 @@ class Scheduler:
             arrival = self.clock.now()
         if deadline is None and self.config.default_slo is not None:
             deadline = arrival + self.config.default_slo
+        if self.telemetry:
+            self.tracer.instant(
+                "request/arrival", ts=arrival, cat="sched",
+                args={"n_nodes": request.n_nodes,
+                      "max_nnz": request.max_nnz, "deadline": deadline})
         return self.queue.submit(request, arrival=arrival, deadline=deadline)
 
+    def _queue_depth(self) -> int:
+        return sum(len(b) for b in self.buckets.values())
+
     def _admit(self, now: float) -> None:
+        admitted = False
         for p in self.queue.due(now):
             tier = self.policy.assign(p.request)
             if tier is None:
@@ -168,9 +196,19 @@ class Scheduler:
                     f"max_nnz={r.max_nnz} (top tier: {self.policy.tiers[-1]})")
                 self.metrics.record_rejection(arrival=p.arrival)
                 self.completed.append(p)
+                if self.telemetry:
+                    self.tracer.instant("request/reject", ts=now, cat="sched",
+                                        args={"reason": r.error})
                 continue
             p.tier = tier
             self.buckets.setdefault(tier, collections.deque()).append(p)
+            admitted = True
+            if self.telemetry:
+                self.tracer.instant("request/admit", ts=now, cat="sched",
+                                    args={"tier": tier.key})
+        if admitted and self.telemetry:
+            self.tracer.counter("queue_depth", self._queue_depth(), ts=now,
+                                cat="sched")
 
     # -- execution ----------------------------------------------------------
     def warmup(self, requests: Sequence[GraphRequest]) -> int:
@@ -193,8 +231,19 @@ class Scheduler:
         # (bn_mode="sample": per-slot numerics), but keep it deterministic
         program = self.programs.get(plan.tier)
         dispatch = self.clock.now()
+        if self.telemetry:
+            # the wall-clock sched/wave span wraps the engine's serve/wave
+            # span (which wraps any trace-time kernel spans): the nested
+            # scheduler → wave → kernel structure the trace viewer shows
+            span = self.tracer.span(
+                "sched/wave", cat="sched",
+                args={"tier": plan.tier.key, "n_requests":
+                      sum(c for _, c in plan.takes)})
+        else:
+            span = contextlib.nullcontext()
         t0 = time.perf_counter()
-        report = program.engine.run_wave([p.request for p in wave])
+        with span:
+            report = program.engine.run_wave([p.request for p in wave])
         measured = time.perf_counter() - t0
         served = report.n_requests - report.n_failed
         service = (measured if self.service_model is None
@@ -202,6 +251,15 @@ class Scheduler:
         self.clock.on_service(service)
         finish = self.clock.now()
         self.metrics.record_wave(plan.tier.key, dispatch, service, report)
+        if self.telemetry:
+            self._feed_regret(plan.tier, program, measured)
+        if self.telemetry:
+            # clock-domain twin of the wall span: where the wave sits on the
+            # scheduler's (possibly virtual) timeline
+            self.tracer.complete(
+                f"wave[{plan.tier.key}]", ts=dispatch, dur=service,
+                cat="sched", args={"served": served,
+                                   "n_failed": report.n_failed})
         for p in wave:
             p.served_tier = plan.tier
             p.dispatch, p.finish = dispatch, finish
@@ -209,7 +267,43 @@ class Scheduler:
                 arrival=p.arrival, dispatch=dispatch, finish=finish,
                 deadline=p.deadline, failed=p.request.failed)
             self.completed.append(p)
+            if self.telemetry:
+                self.tracer.complete(
+                    "request", ts=p.arrival, dur=max(finish - p.arrival, 0.0),
+                    tid="requests", cat="sched",
+                    args={"tier": plan.tier.key,
+                          "wait_s": dispatch - p.arrival,
+                          "failed": bool(p.request.failed),
+                          "deadline_missed": bool(
+                              p.deadline is not None and finish > p.deadline)})
+        if self.telemetry:
+            self.tracer.counter("queue_depth", self._queue_depth(),
+                                ts=finish, cat="sched")
         self.metrics.compile_count = self.programs.compile_count
+
+    def _feed_regret(self, tier: GeometryTier, program, measured: float
+                     ) -> None:
+        """Wave-level calibration feed for the regret auditor: measured wave
+        wall time vs the tier decision's predicted first-layer kernel time.
+        Each tier's FIRST wave is skipped — it carries the compile, which
+        would poison the measured/predicted ratio by orders of magnitude.
+        The serve path's kernels only ever run inside the tier's jitted
+        program (no eager dispatch), so this is where serve-side
+        predicted-vs-measured provenance comes from (DESIGN.md §13)."""
+        if tier not in self._calibrated:
+            self._calibrated.add(tier)      # compile wave: record nothing
+            return
+        d = program.decision
+        w = getattr(d, "workload", None)
+        predicted = dict(getattr(d, "scores", ()) or ()).get(d.impl)
+        if predicted is None or predicted <= 0 or predicted != predicted \
+                or predicted == float("inf"):
+            return
+        from repro.observability import default_auditor
+
+        default_auditor().record(
+            w.key() if w is not None else tier.key, d.impl,
+            predicted_s=predicted, measured_s=measured)
 
     def drain(self) -> list[PendingRequest]:
         """Event loop: admit arrivals, dispatch ready waves, wait (sleep or

@@ -294,10 +294,24 @@ class GraphServeEngine:
         """Execute ONE wave (≤ ``batch`` requests) through the shared jitted
         program and return the wave's fill/padding accounting. This is the
         per-wave executor the continuous-batching ``repro.scheduler`` drives;
-        ``run()`` keeps the legacy fixed-slicing loop on top of it."""
+        ``run()`` keeps the legacy fixed-slicing loop on top of it.
+
+        The whole wave runs inside a ``serve/wave`` span (DESIGN.md §13)
+        tagged with the wave geometry; any kernel-dispatch spans fired at
+        trace time (telemetry on, first wave per geometry) nest inside it."""
+        from repro.observability import TRACER
+
         n = len(wave)
         if n > self.batch:
             raise ValueError(f"wave of {n} requests > {self.batch} slots")
+        with TRACER.span("serve/wave", cat="serve", args={
+                "n_requests": n, "slots": self.batch, "m_pad": self.m_pad,
+                "nnz_pad": self.nnz_pad, "channels": self.cfg.channels,
+                "layer": self.cfg.layer, "impl": self.cfg.impl}):
+            return self._run_wave_inner(wave)
+
+    def _run_wave_inner(self, wave: list[GraphRequest]) -> GraphWaveReport:
+        n = len(wave)
         channels = self.cfg.channels
         n_feat = self.cfg.n_features
         x = np.zeros((self.batch, self.m_pad, n_feat), np.float32)

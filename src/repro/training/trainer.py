@@ -140,16 +140,40 @@ class GCNTrainer:
     batch-sharded on the mesh, params/optimizer state stay replicated, and
     the gradient all-reduce over the mesh is inserted by GSPMD from exactly
     that sharded-batch/replicated-params layout.
+
+    Telemetry (DESIGN.md §13): every step records a ``train/step`` span and
+    a wall-time histogram sample on ``registry`` (the process default unless
+    one is passed); loss/accuracy/grad-norm gauges and graphs-throughput
+    sync on the ``tcfg.log_every`` cadence — the per-step path never forces
+    a device sync (JAX async dispatch stays pipelined). ``telemetry=False``
+    opts the instance out entirely.
     """
 
     def __init__(self, cfg: GCNConfig, opt: AdamConfig | None = None,
-                 tcfg: TrainerConfig | None = None, *, mesh=None):
+                 tcfg: TrainerConfig | None = None, *, mesh=None,
+                 registry=None, telemetry: bool = True):
+        from repro.observability import default_registry
+
         self.cfg = cfg
         self.opt = opt or AdamConfig(lr=3e-3)
         self.tcfg = tcfg or TrainerConfig()
         self.mesh = mesh
         self.manager = CheckpointManager(self.tcfg.checkpoint_dir,
                                          keep=self.tcfg.keep)
+        self.telemetry = telemetry
+        self.registry = registry if registry is not None else \
+            default_registry()
+        self._m_step_s = self.registry.histogram(
+            "train_step_seconds", "per-step wall time (dispatch-paced)")
+        self._m_steps = self.registry.counter(
+            "train_steps_total", "training steps executed")
+        self._m_loss = self.registry.gauge("train_loss", "last synced loss")
+        self._m_acc = self.registry.gauge(
+            "train_accuracy", "last synced accuracy")
+        self._m_gnorm = self.registry.gauge(
+            "train_grad_norm", "last synced global gradient L2 norm")
+        self._m_tput = self.registry.gauge(
+            "train_graphs_per_s", "graphs/s over the last log window")
 
         @jax.jit
         def step(params, state, adj_arrays, x, n_nodes, labels):
@@ -158,8 +182,11 @@ class GCNTrainer:
                 lambda p: gcn_loss(p, self.cfg, adj, x, n_nodes, labels,
                                    mesh=mesh),
                 has_aux=True)(params)
+            gnorm = jax.numpy.sqrt(sum(
+                jax.numpy.vdot(g, g).real
+                for g in jax.tree.leaves(grads)))
             params, state = adam_update(self.opt, params, grads, state)
-            return params, state, loss, acc
+            return params, state, loss, acc, gnorm
 
         self._step = step
 
@@ -262,8 +289,14 @@ class GCNTrainer:
             i for i in IMPLS if precision_of(i)[0] in ("ell", "pallas_ell"))
         maybe_ell = (self.cfg.k_pad is not None
                      and self.cfg.impl in ("auto",) + ell_candidates)
+        from repro.observability import TRACER
+
         ell_by_shape: dict[tuple, bool] = {}
         step = seen = 0
+        gnorm = float("nan")
+        labels = {"layer": self.cfg.layer, "impl": self.cfg.impl}
+        log_every = max(self.tcfg.log_every, 1)
+        win_t0, win_graphs = time.perf_counter(), 0
         for epoch in range(epochs):
             for b in batch_iter(epoch):
                 seen += 1
@@ -288,18 +321,46 @@ class GCNTrainer:
                                                self.cfg.k_pad)
                 adj_arrays = [(a.row_ids, a.col_ids, a.values, a.nnz,
                                a.n_rows) for a in b["adj"]]
-                adj_arrays, x, n_nodes, labels = self._place_batch(
+                adj_arrays, x, n_nodes, y = self._place_batch(
                     (adj_arrays, b["x"], b["n_nodes"], b["labels"]))
-                params, state, loss, acc = self._step(
-                    params, state, adj_arrays, x, n_nodes, labels)
+                if self.telemetry:
+                    with TRACER.span("train/step", cat="train",
+                                     args={"step": seen, **labels}):
+                        t0 = time.perf_counter()
+                        params, state, loss, acc, gnorm = self._step(
+                            params, state, adj_arrays, x, n_nodes, y)
+                        self._m_step_s.observe(
+                            time.perf_counter() - t0, **labels)
+                    self._m_steps.inc(**labels)
+                    win_graphs += b["x"].shape[0]
+                    if seen % log_every == 0:
+                        # the ONLY per-window device sync (mirrors the LM
+                        # Trainer's log_every posture)
+                        self._m_loss.set(float(loss), **labels)
+                        self._m_acc.set(float(acc), **labels)
+                        self._m_gnorm.set(float(gnorm), **labels)
+                        now = time.perf_counter()
+                        if now > win_t0:
+                            self._m_tput.set(win_graphs / (now - win_t0),
+                                             **labels)
+                        win_t0, win_graphs = now, 0
+                else:
+                    params, state, loss, acc, gnorm = self._step(
+                        params, state, adj_arrays, x, n_nodes, y)
                 step = seen
                 if step % max(self.tcfg.checkpoint_every, 1) == 0:
                     self.manager.save(step, (params, state))
             if step > start:    # an epoch fully fast-forwarded on resume
+                if self.telemetry:
+                    self._m_loss.set(float(loss), **labels)
+                    self._m_acc.set(float(acc), **labels)
+                    self._m_gnorm.set(float(gnorm), **labels)
                 rec = {"epoch": epoch + 1, "loss": float(loss),
-                       "acc": float(acc), "time": time.time()}
+                       "acc": float(acc), "grad_norm": float(gnorm),
+                       "time": time.time()}
                 if on_metrics:
                     on_metrics(epoch + 1, rec)
         if step > start:
             self.manager.save(step, (params, state))
-        return params, state, {"loss": float(loss), "acc": float(acc)}
+        return params, state, {"loss": float(loss), "acc": float(acc),
+                               "grad_norm": float(gnorm)}
