@@ -1,0 +1,152 @@
+"""Sampled-tier benchmark (DESIGN.md §14): fanout × graph-size sweep over
+the CSC neighbor-sampling pipeline, plus the two A-B comparisons the CI
+gate pins:
+
+* ``sampling/<geo>/sampled_vs_full`` — forward+backward step time of the
+  fanout-sampled minibatch vs the full-batch step over the whole graph at
+  the LARGEST geometry (``ratio=`` full/sampled, gated ≥ 1.0: minibatching
+  a giant graph must beat stepping it whole, or the tier is pointless).
+* ``sampling/cache_{on,off}/fetch`` — feature bytes fetched from the
+  backing store over one epoch with and without the hot-node cache
+  (``bytes=`` gated: cache-on ≤ cache-off) plus the measured hit rate.
+
+    PYTHONPATH=src python -m benchmarks.bench_sampling
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core.csc import make_block
+from repro.core.formats import BatchedCOO
+from repro.core.gcn import GCNConfig, gcn_node_loss, init_gcn
+from repro.data.graphs import reddit_like
+from repro.observability.metrics import MetricsRegistry
+from repro.sampling import (
+    FeatureStore,
+    HotNodeCache,
+    SampledNodeLoader,
+    neighbor_sample,
+    static_hot_ids,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m_pads", "impls"))
+def _loss_step(params, adj_arrays, x, labels, *, cfg, m_pads, impls):
+    adjs = [BatchedCOO(*a) for a in adj_arrays]
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: gcn_node_loss(p, cfg, adjs, x, labels,
+                                m_pads=m_pads, impls=impls),
+        has_aux=True)(params)
+    return loss, grads
+
+
+def _step_args(blocks, features, labels_all, seeds, n_features):
+    m_pads = tuple(b.m_pad for b in blocks)
+    adj_arrays = tuple(
+        (b.adj.row_ids, b.adj.col_ids, b.adj.values, b.adj.nnz, b.adj.n_rows)
+        for b in blocks)
+    x = np.zeros((blocks[0].m_pad, n_features), np.float32)
+    x[:blocks[0].n_src] = features[blocks[0].src_ids]
+    return adj_arrays, x, labels_all[seeds], m_pads
+
+
+def _full_blocks(data, n_layers):
+    """The whole graph as one square 'block' per layer — the full-batch
+    baseline the sampled step is gated against."""
+    n = data.csc.n_nodes
+    dst = np.repeat(np.arange(n, dtype=np.int64), data.csc.in_degrees())
+    b = make_block(dst.astype(np.int32), data.csc.indices.astype(np.int32),
+                   np.arange(n, dtype=np.int64), n, normalize="mean")
+    return [b] * n_layers
+
+
+def geometry(n_nodes: int, fanouts: list[int], batch_size: int,
+             *, full_baseline: bool) -> None:
+    tag = f"n{n_nodes}_f{'x'.join(map(str, fanouts))}"
+    data = reddit_like(n_nodes, n_classes=8, n_features=64)
+    cfg = GCNConfig(n_features=64, channels=1,
+                    conv_widths=(64,) * len(fanouts),
+                    n_tasks=8, task="multiclass", impl="ref", k_pad=None)
+    params = init_gcn(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(n_nodes, batch_size, replace=False)
+
+    t_sample = time_fn(
+        lambda i: neighbor_sample(data.csc, seeds, fanouts, seed=(0, int(i))),
+        3, warmup=1, iters=5)
+    blocks = neighbor_sample(data.csc, seeds, fanouts, seed=(0, 0))
+    row(f"sampling/{tag}/sample", t_sample * 1e6,
+        f"nnz={sum(b.nnz for b in blocks)},"
+        f"src={blocks[0].n_src},max_deg={max(b.max_deg for b in blocks)}")
+
+    adj, x, y, m_pads = _step_args(blocks, data.features, data.labels,
+                                   seeds, 64)
+    t_samp_step = time_fn(
+        lambda: _loss_step(params, adj, x, y, cfg=cfg, m_pads=m_pads,
+                           impls=None))
+    row(f"sampling/{tag}/step", t_samp_step * 1e6,
+        f"batch={batch_size},m_pads={'x'.join(map(str, m_pads))}")
+
+    if full_baseline:
+        fb = _full_blocks(data, len(fanouts))
+        fadj, fx, fy, fm = _step_args(fb, data.features, data.labels,
+                                      np.arange(n_nodes), 64)
+        t_full = time_fn(
+            lambda: _loss_step(params, fadj, fx, fy, cfg=cfg, m_pads=fm,
+                               impls=None),
+            warmup=1, iters=3)
+        row(f"sampling/{tag}/full_batch_step", t_full * 1e6,
+            f"nodes={n_nodes},nnz={fb[0].nnz}")
+        row(f"sampling/{tag}/sampled_vs_full", t_samp_step * 1e6,
+            f"ratio={t_full / t_samp_step:.2f}")
+
+
+def cache_sweep(n_nodes: int, fanouts: list[int], batch_size: int) -> None:
+    """One epoch's backing-store traffic, cache on vs off (fresh registry
+    per arm so the counters don't mix)."""
+    data = reddit_like(n_nodes, n_classes=8, n_features=64)
+    results = {}
+    for arm in ("off", "on"):
+        reg = MetricsRegistry()
+        store = FeatureStore(data.features, registry=reg)
+        cache = None
+        if arm == "on":
+            cap = max(256, n_nodes // 16)
+            cache = HotNodeCache(
+                store, cap, policy="static",
+                hot_ids=static_hot_ids(data.csc.in_degrees(), cap),
+                registry=reg)
+        loader = SampledNodeLoader(
+            data.csc, data.features, data.labels, data.train_ids,
+            fanouts=fanouts, batch_size=batch_size,
+            cache=cache, store=store, registry=reg)
+        for _ in loader.epoch(0):
+            pass
+        nbytes = store._fetch_bytes.total()
+        hit = cache.hit_rate() if cache else 0.0
+        results[arm] = nbytes
+        row(f"sampling/cache_{arm}/fetch", 0.0,
+            f"bytes={int(nbytes)},hit_rate={hit:.3f}")
+    saved = 1.0 - results["on"] / max(results["off"], 1.0)
+    row("sampling/cache/summary", 0.0, f"traffic_saved={saved:.3f}")
+
+
+def main(smoke: bool = False) -> None:
+    if smoke:
+        geos = [(2000, [5, 3], 128), (6000, [10, 5], 256)]
+        cache_geo = (6000, [10, 5], 256)
+    else:
+        geos = [(20000, [10, 5], 512), (50000, [10, 5], 512),
+                (50000, [15, 10], 512)]
+        cache_geo = (50000, [10, 5], 512)
+    for i, (n, fanouts, bs) in enumerate(geos):
+        geometry(n, fanouts, bs, full_baseline=(i == len(geos) - 1))
+    cache_sweep(*cache_geo)
+
+
+if __name__ == "__main__":
+    main()

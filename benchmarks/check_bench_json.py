@@ -39,6 +39,12 @@ Two classes of failure, both cheap to hit when a harness regresses silently:
    covering the full message-passing matrix is itself part of the ISSUE 7
    acceptance.
 
+6. **Sampling gates** (``BENCH_sampling.json`` only, suite="sampling"): the
+   cache on/off rows must both publish ``bytes=`` with cache-on fetching no
+   more than cache-off, and every ``sampled_vs_full`` row must report
+   ``ratio >= 1.0`` — the ISSUE 10 acceptance that fanout-sampled minibatch
+   steps beat the full-batch step at the largest benchmarked geometry.
+
 Exit code 1 with one line per problem; silent 0 otherwise.
 
     PYTHONPATH=src python -m benchmarks.check_bench_json [paths...]
@@ -143,6 +149,53 @@ def _check_gspmm_rows(path, rows) -> list[str]:
     return errors
 
 
+# --- sampling-suite gates (BENCH_sampling.json, suite="sampling") ---------
+# the two A-B comparisons the sampled tier exists for (ISSUE 10): the
+# hot-node cache must never INCREASE backing-store traffic, and a sampled
+# minibatch step must beat the full-batch step at the largest geometry
+# (its sampled_vs_full row publishes ratio= full/sampled, so the shared
+# RATIO_RE machinery already floors it at MIN_RATIO; the suite gate holds
+# it to >= 1.0).
+BYTES_RE = re.compile(r"(?:^|[ ,;])bytes=([0-9]+)")
+MIN_SAMPLED_RATIO = 1.0
+
+
+def _check_sampling_rows(path, rows) -> list[str]:
+    errors: list[str] = []
+    by_name = {r.get("name"): r for r in rows}
+    fetch = {}
+    for arm in ("on", "off"):
+        name = f"sampling/cache_{arm}/fetch"
+        r = by_name.get(name)
+        m = BYTES_RE.search(str(r.get("derived", ""))) if r else None
+        if m is None:
+            errors.append(f"{path.name}: missing required row {name!r} "
+                          "(with bytes=) — the cache A-B fell out of the "
+                          "sweep")
+        else:
+            fetch[arm] = int(m.group(1))
+    if len(fetch) == 2 and fetch["on"] > fetch["off"]:
+        errors.append(
+            f"{path.name}: cache-on fetched {fetch['on']} bytes > cache-off "
+            f"{fetch['off']} — the hot-node cache is amplifying traffic "
+            "(ISSUE 10 gate)")
+    vs = [(n, r) for n, r in by_name.items()
+          if isinstance(n, str) and n.endswith("/sampled_vs_full")]
+    if not vs:
+        errors.append(
+            f"{path.name}: no sampled_vs_full row — the full-batch baseline "
+            "comparison is no longer benchmarked")
+    for n, r in vs:
+        m = RATIO_RE.search(str(r.get("derived", "")))
+        if m is None or float(m.group(1)) < MIN_SAMPLED_RATIO:
+            errors.append(
+                f"{path.name}: {n} ratio="
+                f"{m.group(1) if m else '<missing>'} < {MIN_SAMPLED_RATIO} "
+                "— the sampled step no longer beats full-batch at the "
+                "largest geometry (ISSUE 10 gate)")
+    return errors
+
+
 def _check_precision_rows(path, rows) -> list[str]:
     errors: list[str] = []
     summary = None
@@ -227,6 +280,8 @@ def check_file(path: pathlib.Path) -> list[str]:
         errors.extend(_check_formats_rows(path, doc.get("rows", [])))
     if doc.get("suite") == "gspmm":
         errors.extend(_check_gspmm_rows(path, doc.get("rows", [])))
+    if doc.get("suite") == "sampling":
+        errors.extend(_check_sampling_rows(path, doc.get("rows", [])))
     return errors
 
 

@@ -22,7 +22,7 @@ from benchmarks.common import header, results_snapshot, write_bench_json
 
 # suites whose rows are persisted as BENCH_<name>.json at the repo root so
 # the perf trajectory stays machine-readable across PRs
-PERSISTED = {"fused", "serve", "formats", "gspmm"}
+PERSISTED = {"fused", "serve", "formats", "gspmm", "sampling"}
 # persisted only on full runs: the precision speedup gate (check_bench_json
 # enforces best_speedup >= 1.0 on the summary row) needs paper-scale
 # geometries to amortize the cast overhead — smoke shapes would overwrite
@@ -40,6 +40,7 @@ def _smoke_suites():
         bench_fused,
         bench_gspmm,
         bench_precision,
+        bench_sampling,
     )
 
     def decisions():
@@ -72,6 +73,7 @@ def _smoke_suites():
         ("serve", lambda: bench_serve.graph_sweep(smoke=True)),
         ("precision", lambda: bench_precision.main(smoke=True)),
         ("gspmm", lambda: bench_gspmm.main(smoke=True)),
+        ("sampling", lambda: bench_sampling.main(smoke=True)),
     ]
 
 
@@ -107,6 +109,7 @@ def main() -> None:
             bench_kernel_breakdown,
             bench_moe,
             bench_precision,
+            bench_sampling,
             bench_serve,
         )
 
@@ -123,6 +126,7 @@ def main() -> None:
             ("serve", lambda: bench_serve.main(persist=False)),
             ("precision", lambda: bench_precision.main()),
             ("gspmm", lambda: bench_gspmm.main(smoke=not args.full)),
+            ("sampling", lambda: bench_sampling.main(smoke=not args.full)),
         ]
     failed = []
     for name, fn in suites:

@@ -31,6 +31,27 @@ ENV_VAR = "REPRO_TUNE_CACHE"
 _VERSION = 1
 
 
+def _merge_records(disk: dict, mine: dict) -> dict:
+    """Union of two record maps (see :meth:`TuningCache.save`): disk-only
+    keys survive, shared keys merge their ``times`` at per-impl min with
+    ``best`` recomputed; ``interpret`` follows the merged best's side."""
+    merged = dict(disk)
+    for key, rec in mine.items():
+        other = merged.get(key)
+        if other is None:
+            merged[key] = rec
+            continue
+        times = dict(other.get("times", {}))
+        for impl, t in rec.get("times", {}).items():
+            times[impl] = min(t, times[impl]) if impl in times else t
+        best = min(times, key=times.get) if times else rec.get("best")
+        interpret = (rec if best in rec.get("times", {})
+                     and rec["times"].get(best) == times.get(best)
+                     else other).get("interpret")
+        merged[key] = {"best": best, "times": times, "interpret": interpret}
+    return merged
+
+
 class TuningCache:
     """Workload-key → measured per-impl seconds, persisted as JSON."""
 
@@ -63,10 +84,31 @@ class TuningCache:
         return best
 
     def save(self) -> None:
+        """Merge-on-save then atomic replace.
+
+        Atomic-replace alone is last-write-wins: two processes sharing one
+        cache path (CI dtype-matrix lanes, a sampler worker next to the
+        trainer) would silently drop each other's measurements. Before
+        writing we re-read the file and union its records into ours —
+        disk-only keys are adopted; for keys both sides measured, the
+        per-impl ``times`` merge at min (each measurement is a median of a
+        noisy timer, the lower one is the better estimate of the same
+        quantity) and ``best`` is recomputed from the merged map. The merged
+        view also updates ``self.records`` so a subsequent ``best()`` in
+        this process sees what it just persisted."""
         if not self.path:
             return
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
+        if os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    doc = json.load(f)
+                if doc.get("version") == _VERSION:
+                    self.records = _merge_records(doc.get("records", {}),
+                                                  self.records)
+            except (json.JSONDecodeError, OSError):
+                pass    # a torn/corrupt file loses the merge, not the save
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:

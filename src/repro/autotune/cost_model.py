@@ -178,6 +178,16 @@ class Workload:
     # hybrid split amortizes only when it exceeds the hub threshold. None
     # keeps every legacy estimate and cache key unchanged.
     max_deg: int | None = None
+    # the sampled-BLOCK knob (DESIGN.md §14): padded dst-row count of a
+    # bipartite block embedded in the (m_pad, m_pad) square — only the
+    # first `block` rows are real outputs. Output traffic scales to it for
+    # every impl, and the row-split (CSR/hybrid) classes additionally bound
+    # their per-row work by it (rows past n_dst have rlen 0 — predicated
+    # off), while dense still densifies the full square and ELL still runs
+    # every padded row's k_pad slots. That asymmetry is exactly why
+    # CSR-class kernels win sampled blocks. None (a non-block workload)
+    # keeps every legacy estimate and cache key unchanged.
+    block: int | None = None
 
     def key(self) -> str:
         """Stable string key for the persistent tuning cache (DESIGN.md §5).
@@ -199,6 +209,8 @@ class Workload:
             base += f"_o{self.op}"
         if self.max_deg is not None:
             base += f"_md{self.max_deg}"
+        if self.block is not None:
+            base += f"_blk{self.block}"
         return base
 
     @property
@@ -254,7 +266,11 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
     f32_path = policy == "f32"
     vb, ib, fb, ob = _traffic(policy, w.itemsize)
     vpu_peak = hw.peak_flops / 16.0           # vector (non-MXU) arithmetic
-    out_bytes = w.batch * w.m_pad * w.n_b * ob
+    # sampled blocks (DESIGN.md §14): only the first `block` rows are real
+    # outputs; non-block workloads keep rows_out == m_pad (legacy estimates
+    # bitwise unchanged)
+    rows_out = w.block if w.block is not None else w.m_pad
+    out_bytes = w.batch * rows_out * w.n_b * ob
     b_bytes = w.batch * w.m_pad * w.n_b * fb
     # g-SpMM extras (DESIGN.md §11), zero for plain SpMM so every legacy
     # estimate is unchanged: vector edges read (d_e - 1) extra value
@@ -321,7 +337,9 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
         plan = spmm_plan(w, impl)
         if plan.case == 3:
             return float("inf")   # kernels/ops.py falls back before Pallas
-        flops = 2.0 * w.batch * w.m_pad * row_bound * w.n_b
+        # row-split work is per REAL output row: block rows past n_dst have
+        # rlen 0 and are predicated off
+        flops = 2.0 * w.batch * rows_out * row_bound * w.n_b
         # per (matrix × panel) grid step: B panel + FLAT cid/val arrays +
         # start/rlen row pointers (always int32); output panel written once.
         per_step = (w.m_pad * plan.n_block * fb
@@ -377,7 +395,7 @@ def estimate(w: Workload, impl: str, hw: HW = HW()) -> float:
             # tiles) keep it from winning on uniform-looking workloads
             row_bound = (w.k_pad if w.k_pad is not None
                          else max(1, -(-w.nnz_pad // w.m_pad)))
-        flops_s = 2.0 * w.batch * w.m_pad * row_bound * w.n_b
+        flops_s = 2.0 * w.batch * rows_out * row_bound * w.n_b
         # CSR-remainder traffic + the permuted row pointers and rank vector
         per_step = (w.m_pad * plan.n_block * fb
                     + w.nnz_pad * ((4 + w.itemsize) if f32_path else (ib + vb))

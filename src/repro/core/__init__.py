@@ -15,6 +15,14 @@ from repro.core.formats import (  # noqa: F401
     random_batch,
     validate_ell_k_pad,
 )
+from repro.core.csc import (  # noqa: F401
+    Block,
+    CSCGraph,
+    csc_from_edges,
+    csc_to_coo,
+    coo_to_csc,
+    make_block,
+)
 from repro.core.batching import (  # noqa: F401
     BatchPlan,
     chunk_counts,

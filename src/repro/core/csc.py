@@ -1,0 +1,204 @@
+"""CSC sampling structure + bipartite Blocks for the giant-graph tier
+(DESIGN.md §14).
+
+Everything before this tier batches many *small* graphs — the source paper's
+regime. One Reddit/ogbn-scale graph (millions of nodes) cannot be padded into
+a :class:`~repro.core.formats.BatchedCOO` wholesale; the production pattern
+(DGL graphbolt's ``csc_sampling_graph``/``minibatch_sampler`` split, GE-SpMM's
+row-split CSR) is:
+
+1. hold the FULL graph host-side in a static CSC structure (:class:`CSCGraph`:
+   one ``indptr`` column pointer per destination node, in-neighbor ``indices``
+   grouped per column — sampling reads exactly one contiguous slice per seed);
+2. sample fanout-bounded neighborhoods into bipartite **Blocks**
+   (``repro.sampling``), each emitted directly in the existing padded
+   batched-COO format so every kernel, autotuner branch and telemetry hook
+   downstream runs on them *unchanged*.
+
+**Block convention.** A block is a (dst-nodes × src-nodes) bipartite
+adjacency with *compacted* local ids. We embed it in the square
+``(m_pad, m_pad)`` shape the batched kernels expect by ordering the src node
+set with the dst nodes as its PREFIX (``src_ids[:n_dst]`` are the dst nodes —
+DGL's ``include_dst_in_src`` invariant): rows ``0..n_dst-1`` carry edges,
+rows ``n_dst..m_pad-1`` are structural padding (value 0.0, index 0 — the
+paper's §IV-C invariant), and ``BatchedCOO.n_rows == n_dst`` stays the true
+row count exactly as for a small-graph batch. ``C = A_block @ H_src`` then
+computes the next layer's dst features in its first ``n_dst`` rows, which are
+by construction the *src prefix of the next block* — layer chaining is a
+static slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import BatchedCOO, coo_from_lists
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class CSCGraph:
+    """Static host-side CSC over ONE giant graph (NumPy, never traced).
+
+    indptr  : (n_nodes + 1,) int64 — per-DESTINATION column pointers
+    indices : (n_edges,)    int32/int64 — in-neighbor (source) node ids,
+              grouped per destination: node ``v``'s in-neighbors are
+              ``indices[indptr[v]:indptr[v+1]]``
+
+    CSC-by-destination is the sampling-native layout: fanout sampling reads
+    one contiguous ``indices`` slice per seed (GE-SpMM row-split locality,
+    graphbolt's ``csc_sampling_graph``). The structure is immutable and
+    shared read-only across sampler workers.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+
+    def __post_init__(self):
+        if self.indptr.ndim != 1 or self.indices.ndim != 1:
+            raise ValueError("CSCGraph arrays must be 1-D")
+        if int(self.indptr[0]) != 0 or int(self.indptr[-1]) != len(self.indices):
+            raise ValueError(
+                f"indptr must run 0..n_edges={len(self.indices)}, got "
+                f"[{int(self.indptr[0])}..{int(self.indptr[-1])}]")
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.indices)
+
+    def in_degrees(self) -> np.ndarray:
+        """(n_nodes,) int64 — per-destination in-degree (the hot-node cache's
+        static admission statistic: Zipf-hot hubs have the top in-degrees)."""
+        return np.diff(self.indptr)
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        """The contiguous in-neighbor slice of one destination node."""
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+
+def csc_from_edges(src: np.ndarray, dst: np.ndarray,
+                   n_nodes: int) -> CSCGraph:
+    """Build a :class:`CSCGraph` from flat (src → dst) edge arrays.
+
+    Counting sort by destination (stable: parallel edges and the relative
+    source order within a destination are preserved), O(E + N) — no
+    comparison sort, so a 10M-edge graph builds in one pass.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.shape != dst.shape:
+        raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
+    if len(dst) and (int(dst.min()) < 0 or int(dst.max()) >= n_nodes
+                     or int(src.min()) < 0 or int(src.max()) >= n_nodes):
+        raise ValueError(f"edge endpoints out of range [0, {n_nodes})")
+    counts = np.bincount(dst, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    order = np.argsort(dst, kind="stable")
+    indices = np.ascontiguousarray(src[order].astype(np.int32, copy=False))
+    return CSCGraph(indptr=indptr, indices=indices)
+
+
+def coo_to_csc(src: np.ndarray, dst: np.ndarray, n_nodes: int) -> CSCGraph:
+    """COO edge list → CSC (alias of :func:`csc_from_edges`, named for the
+    round-trip pair)."""
+    return csc_from_edges(src, dst, n_nodes)
+
+
+def csc_to_coo(csc: CSCGraph) -> tuple[np.ndarray, np.ndarray]:
+    """CSC → flat (src, dst) COO edge arrays, destination-major (the same
+    order ``coo_to_csc`` stores, so ``coo_to_csc(*csc_to_coo(g), n)`` is
+    bitwise ``g``)."""
+    dst = np.repeat(np.arange(csc.n_nodes, dtype=np.int64),
+                    csc.in_degrees())
+    return csc.indices.copy(), dst
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One sampled bipartite (dst × src) adjacency, kernel-ready.
+
+    adj     : BatchedCOO, batch=1, square over ``m_pad`` padded rows. Rows
+              are LOCAL dst ids (< n_dst), cols LOCAL src ids (< n_src);
+              ``adj.n_rows == [n_dst]`` and padded slots follow the §IV-C
+              zero-value/zero-index invariant, so ``batched_spmm`` /
+              ``batched_gspmm`` and every registry impl run unchanged.
+    src_ids : (n_src,) int64 GLOBAL node ids of the src set, dst-prefixed:
+              ``src_ids[:n_dst]`` are the dst nodes in seed order.
+    m_pad   : the padded square dimension the adjacency was emitted at
+              (a bucket rung — see ``repro.sampling.bucketing``).
+    max_deg : true max sampled in-degree of any dst row — the host-side skew
+              evidence ``autotune.Workload.max_deg`` prices (DESIGN.md §12):
+              a hubby block ranks the CSR/hybrid classes first.
+    """
+
+    adj: BatchedCOO
+    src_ids: np.ndarray
+    n_dst: int
+    n_src: int
+    m_pad: int
+    max_deg: int
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.adj.nnz_pad
+
+    @property
+    def nnz(self) -> int:
+        return int(np.asarray(self.adj.nnz)[0])
+
+    def dst_ids(self) -> np.ndarray:
+        """(n_dst,) global ids of the dst nodes (the src prefix)."""
+        return self.src_ids[:self.n_dst]
+
+
+def make_block(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    src_ids: np.ndarray,
+    n_dst: int,
+    *,
+    m_pad: int | None = None,
+    nnz_pad: int | None = None,
+    normalize: str = "mean",
+) -> Block:
+    """Emit one sampled bipartite adjacency as a kernel-ready :class:`Block`.
+
+    ``rows``/``cols`` are LOCAL (dst, src) edge endpoints; ``src_ids`` the
+    dst-prefixed global id map. ``normalize="mean"`` sets each edge value to
+    ``1 / sampled_in_degree(dst)`` (the neighbor-sampled mean aggregator —
+    fanout sampling changes degrees per minibatch, so normalization must use
+    the SAMPLED degree, not the full graph's); ``"none"`` keeps 1.0.
+    ``m_pad``/``nnz_pad`` pad to a bucket rung (defaults: minimal hardware
+    multiples).
+    """
+    if normalize not in ("mean", "none"):
+        raise ValueError(f"unknown normalize {normalize!r}: "
+                         "expected 'mean' or 'none'")
+    rows = np.asarray(rows, np.int32)
+    cols = np.asarray(cols, np.int32)
+    n_src = len(src_ids)
+    deg = np.bincount(rows, minlength=max(n_dst, 1)) if len(rows) else \
+        np.zeros(max(n_dst, 1), np.int64)
+    max_deg = int(deg.max()) if len(deg) else 0
+    if normalize == "mean" and len(rows):
+        vals = (1.0 / np.maximum(deg[rows], 1)).astype(np.float32)
+    else:
+        vals = np.ones(len(rows), np.float32)
+    m_pad = m_pad or _round_up(max(n_src, 1), 8)
+    if n_src > m_pad:
+        raise ValueError(f"n_src={n_src} exceeds m_pad={m_pad}")
+    if nnz_pad is not None and len(rows) > nnz_pad:
+        raise ValueError(f"nnz={len(rows)} exceeds nnz_pad={nnz_pad}")
+    adj = coo_from_lists([(rows, cols, vals)], [n_dst], nnz_pad=nnz_pad)
+    return Block(adj=adj, src_ids=np.asarray(src_ids, np.int64),
+                 n_dst=int(n_dst), n_src=int(n_src), m_pad=int(m_pad),
+                 max_deg=max_deg)

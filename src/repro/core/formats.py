@@ -419,6 +419,28 @@ def random_batch(
     return coo_from_lists(triples, n_rows, dtype=dtype), m_pad
 
 
+def powerlaw_degrees(
+    rng: np.random.Generator,
+    n: int,
+    avg_deg: float,
+    alpha: float = 1.2,
+) -> np.ndarray:
+    """(n,) int64 truncated-power-law degree sequence: ``deg_r ∝ (r+1)^-alpha``
+    rescaled to mean ≈ ``avg_deg``, capped at ``n``, then SHUFFLED so hubs
+    land on random ids. This is the one Zipf recipe shared by the
+    small-graph skewed batches (:func:`random_powerlaw_batch`) and the
+    giant-graph "reddit-like" node-classification generator
+    (``repro.data.graphs``): hub nodes hold a large fraction of the edges —
+    the load-imbalance regime the hybrid dispatch absorbs (DESIGN.md §12)
+    and the hot-node feature cache exploits (DESIGN.md §14)."""
+    w = (np.arange(n, dtype=np.float64) + 1.0) ** -alpha
+    deg = np.minimum(
+        np.maximum(np.rint(w * (avg_deg * n / w.sum())), 0.0), n
+    ).astype(np.int64)
+    rng.shuffle(deg)
+    return deg
+
+
 def random_powerlaw_batch(
     rng: np.random.Generator,
     *,
@@ -431,20 +453,17 @@ def random_powerlaw_batch(
 ) -> tuple[BatchedCOO, int]:
     """Degree-SKEWED square sparse matrices: per-row degrees follow a
     truncated power law (Zipf-like, ``deg_r ∝ (r+1)^-alpha`` over a random
-    row order), rescaled so the mean degree is ≈ ``avg_deg`` and capped at
-    ``dim``. The head rows are hubs holding a large fraction of the nnz —
-    the load-imbalance regime a flat row-split serializes on and the hybrid
-    dispatch's MXU tiles absorb (DESIGN.md §12). Returns (BatchedCOO, m_pad).
+    row order — :func:`powerlaw_degrees`), rescaled so the mean degree is ≈
+    ``avg_deg`` and capped at ``dim``. The head rows are hubs holding a
+    large fraction of the nnz — the load-imbalance regime a flat row-split
+    serializes on and the hybrid dispatch's MXU tiles absorb (DESIGN.md
+    §12). Returns (BatchedCOO, m_pad).
     """
     dims = (dim, dim) if isinstance(dim, int) else dim
     triples, n_rows = [], []
     for _ in range(batch):
         m = int(rng.integers(dims[0], dims[1] + 1))
-        w = (np.arange(m, dtype=np.float64) + 1.0) ** -alpha
-        deg = np.minimum(
-            np.maximum(np.rint(w * (avg_deg * m / w.sum())), 0.0), m
-        ).astype(np.int64)
-        rng.shuffle(deg)        # hubs land on random row ids, not row 0..h
+        deg = powerlaw_degrees(rng, m, avg_deg, alpha)
         rows, cols = [], []
         for r in range(m):
             cs = rng.choice(m, size=int(deg[r]), replace=False).tolist()

@@ -239,6 +239,75 @@ def apply_gcn(
     return readout @ params["head"]["w"] + params["head"]["b"]
 
 
+def apply_gcn_blocks(
+    params,
+    cfg: GCNConfig,
+    adjs: Sequence[BatchedCOO],  # one per conv layer, input-side first
+    x: jax.Array,                # (m_pads[0], n_features) input-layer src rows
+    *,
+    m_pads: tuple[int, ...],     # static per-layer square dims (bucket rungs)
+    impls: tuple[str, ...] | None = None,  # static per-layer resolved impls
+) -> jax.Array:
+    """Forward over one sampled minibatch's layered blocks (DESIGN.md §14).
+
+    ``adjs[i]`` is layer ``i``'s bipartite block in the square
+    ``(m_pads[i], m_pads[i])`` embedding (``core.csc.Block.adj``): its first
+    ``n_dst_i`` output rows are — by the dst-prefix convention — exactly
+    layer ``i+1``'s src prefix, so chaining is a static slice/pad to
+    ``m_pads[i+1]`` plus a mask from the traced ``adj.n_rows``. All shapes
+    here are static (the loader's bucket rungs): one compile per distinct
+    ``(m_pads, impls, nnz_pads)``, bounded by the ladder product.
+
+    ``impls`` carries the trainer's per-layer block-aware autotune decision
+    (``Workload(block=..., max_deg=...)``) — ``None`` falls back to
+    ``cfg.impl`` for every layer. Returns per-node logits
+    ``(m_pads[-1], n_tasks)``; rows past the seed count are padding.
+    """
+    if len(adjs) != len(params["convs"]):
+        raise ValueError(f"{len(adjs)} blocks for "
+                         f"{len(params['convs'])} conv layers")
+    if cfg.layer != "gcn":
+        raise ValueError("sampled-block forward currently supports "
+                         f"layer='gcn' only, got {cfg.layer!r}")
+    if impls is None:
+        impls = (cfg.impl,) * len(adjs)
+    h = x[None]                               # (1, m_pads[0], n_features)
+    for i, (conv_p, bn_p) in enumerate(zip(params["convs"], params["bns"])):
+        adj = adjs[i]
+        # real dst rows of THIS layer (traced — part of the block's pytree)
+        mask = (
+            jnp.arange(h.shape[1])[None, :, None] < adj.n_rows[0]
+        ).astype(h.dtype)
+        h = graph_conv_batched(conv_p, [adj], h, impl=impls[i],
+                               k_pad=cfg.k_pad, interpret=cfg.interpret,
+                               precision=cfg.precision)
+        h = _batch_norm(bn_p, h * mask, mask, cfg.bn_mode)
+        h = jax.nn.relu(h) * mask
+        if i + 1 < len(adjs):
+            # dst rows ARE the next block's src prefix (same local ids)
+            m_next = m_pads[i + 1]
+            if m_next <= h.shape[1]:
+                h = h[:, :m_next]
+            else:
+                h = jnp.pad(h, ((0, 0), (0, m_next - h.shape[1]), (0, 0)))
+    # node-level head: no readout — one logit row per dst node
+    return h[0] @ params["head"]["w"] + params["head"]["b"]
+
+
+def gcn_node_loss(params, cfg: GCNConfig, adjs, x, labels, *,
+                  m_pads: tuple[int, ...],
+                  impls: tuple[str, ...] | None = None):
+    """Node-classification loss over the seed rows of a sampled minibatch:
+    softmax CE on the first ``len(labels)`` rows of the block forward (the
+    seed prefix of the last block — padding rows never touch the loss)."""
+    logits = apply_gcn_blocks(params, cfg, adjs, x, m_pads=m_pads,
+                              impls=impls)[:labels.shape[0]]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
 def gcn_loss(params, cfg: GCNConfig, adj, x, n_nodes, labels, *, mesh=None):
     logits = apply_gcn(params, cfg, adj, x, n_nodes, mesh=mesh)
     if cfg.task == "multitask_binary":

@@ -14,7 +14,8 @@ from typing import Iterator
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.formats import BatchedCOO, coo_from_lists
+from repro.core.csc import CSCGraph, csc_from_edges
+from repro.core.formats import BatchedCOO, coo_from_lists, powerlaw_degrees
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,9 +140,16 @@ def batches(
     drop_remainder: bool = True,
     seed: int = 0,
     epochs: int = 1,
+    start_epoch: int = 0,
 ) -> Iterator[dict]:
     """Padding batch iterator: pads every sample to the dataset max (static
-    shapes → one compiled step), yields per-channel BatchedCOO + features."""
+    shapes → one compiled step), yields per-channel BatchedCOO + features.
+
+    Each epoch's shuffle is a pure function of ``(seed, epoch)`` — NOT one
+    sequentially-consumed RNG — so a checkpoint-restored run can rebuild any
+    epoch's exact batch order without replaying the epochs before it:
+    ``batches(..., start_epoch=e)`` reproduces the tail of a longer stream
+    bitwise (the resume contract ``GCNTrainer.fit`` fast-forwards on)."""
     m_pad = m_pad or -(-max(s.n_nodes for s in data) // 8) * 8
     # Pad nnz to the DATASET max by default so every batch has identical
     # static shapes (single XLA compilation across the epoch).
@@ -149,10 +157,8 @@ def batches(
         nnz_pad = -(-max(
             max(len(s.rows[ch]) for ch in range(spec.channels))
             for s in data) // 8) * 8
-    rng = np.random.default_rng(seed)
-    idx = np.arange(len(data))
-    for _ in range(epochs):
-        rng.shuffle(idx)
+    for epoch in range(start_epoch, start_epoch + epochs):
+        idx = np.random.default_rng((seed, epoch)).permutation(len(data))
         n_full = len(idx) // batch_size
         for i in range(n_full if drop_remainder else n_full + 1):
             sel = idx[i * batch_size:(i + 1) * batch_size]
@@ -179,3 +185,87 @@ def batches(
                                        jnp.int32),
                 "labels": jnp.asarray(labels),
             }
+
+
+# -- giant-graph tier (DESIGN.md §14) -----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeClassData:
+    """One giant node-classification graph for the sampled tier: the static
+    CSC sampling structure, per-node features/labels, and a train/val seed
+    split. Everything is host-side NumPy — features enter the device only
+    through the sampled-minibatch gather."""
+
+    csc: CSCGraph
+    features: np.ndarray   # (n_nodes, n_features) float32
+    labels: np.ndarray     # (n_nodes,) int32 class ids
+    train_ids: np.ndarray  # (n_train,) int64
+    val_ids: np.ndarray    # (n_val,) int64
+    n_classes: int
+
+
+def reddit_like(
+    n_nodes: int = 100_000,
+    *,
+    n_classes: int = 8,
+    n_features: int = 64,
+    avg_deg: int = 12,
+    alpha: float = 1.2,
+    homophily: float = 0.7,
+    noise: float = 1.0,
+    val_frac: float = 0.1,
+    seed: int = 0,
+) -> NodeClassData:
+    """Synthetic "reddit-like" powerlaw node-classification graph.
+
+    The two properties the sampled tier exercises, built in O(E + N)
+    vectorized passes (a 100k-node / ~1M-edge graph generates in ~a second):
+
+    * **Zipf-hot hubs** — per-node in-degrees follow the same powerlaw as
+      ``random_powerlaw_batch`` (shared :func:`powerlaw_degrees` helper), so
+      a handful of hub nodes appear in most sampled neighborhoods: exactly
+      the skew the hot-node feature cache and the autotuner's ``max_deg``
+      pricing are built for.
+    * **Learnable labels** — planted partition: each edge's source is drawn
+      from the destination's own class with probability ``homophily`` (else
+      uniformly), and features are a noisy class centroid, so neighbor
+      aggregation genuinely helps and a sampled GCN's accuracy climbs well
+      above ``1 / n_classes`` (the e2e test's signal).
+
+    Self-loops are added on every node (paper §II-A's ``a_uu = 1``), so a
+    destination's own features survive fanout sampling.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    # class-sorted node table: same-class sources are one fancy-index away
+    order = np.argsort(labels, kind="stable")
+    class_sizes = np.bincount(labels, minlength=n_classes)
+    class_offsets = np.zeros(n_classes + 1, np.int64)
+    np.cumsum(class_sizes, out=class_offsets[1:])
+    # powerlaw IN-degrees: hubs are hot as destinations AND (by symmetry of
+    # the uniform branch) as sampled sources
+    deg = powerlaw_degrees(rng, n_nodes, avg_deg, alpha)
+    dst = np.repeat(np.arange(n_nodes, dtype=np.int64), deg)
+    e = len(dst)
+    same = rng.random(e) < homophily
+    dst_cls = labels[dst]
+    within = rng.integers(0, np.maximum(class_sizes[dst_cls], 1))
+    src = np.where(
+        same,
+        order[class_offsets[dst_cls] + within],   # same-class source
+        rng.integers(0, n_nodes, e),              # long-range source
+    )
+    loops = np.arange(n_nodes, dtype=np.int64)
+    src = np.concatenate([src, loops])
+    dst = np.concatenate([dst, loops])
+    csc = csc_from_edges(src, dst, n_nodes)
+    centroids = rng.standard_normal((n_classes, n_features))
+    features = (centroids[labels]
+                + noise * rng.standard_normal((n_nodes, n_features))
+                ).astype(np.float32)
+    perm = rng.permutation(n_nodes).astype(np.int64)
+    n_val = int(n_nodes * val_frac)
+    return NodeClassData(csc=csc, features=features, labels=labels,
+                         train_ids=perm[n_val:], val_ids=perm[:n_val],
+                         n_classes=n_classes)

@@ -1,0 +1,20 @@
+"""Giant-graph sampling tier: CSC neighbor sampling, geometry bucketing,
+hot-node feature caching, and the assembled minibatch loader (DESIGN.md §14).
+"""
+from repro.sampling.bucketing import (  # noqa: F401
+    block_caps,
+    block_ladders,
+    bucket_for,
+)
+from repro.sampling.feature_cache import (  # noqa: F401
+    FeatureStore,
+    HotNodeCache,
+    Prefetcher,
+    static_hot_ids,
+)
+from repro.sampling.item_sampler import ItemSampler  # noqa: F401
+from repro.sampling.loader import (  # noqa: F401
+    SampledBatch,
+    SampledNodeLoader,
+)
+from repro.sampling.neighbor import neighbor_sample, sample_layer  # noqa: F401

@@ -1,0 +1,77 @@
+"""Geometry bucketing for sampled blocks (DESIGN.md §14).
+
+Sampled blocks have data-dependent shapes — every minibatch draws a
+different ``(n_src, nnz)`` per layer — and JAX recompiles per shape. We
+reuse the serving scheduler's ladder policy (``core.batching.tier_ladder``,
+DESIGN.md §8): each layer gets a small static set of ``(m_pad, nnz_pad)``
+rungs derived from its worst-case caps, every sampled block is padded UP to
+the smallest covering rung, and the per-layer compile count is bounded by
+``len(ladder)`` for the whole run.
+
+The caps are closed-form from the sampling parameters alone (no data pass):
+walking seed-side inward, layer ``i``'s destination count is at most
+``batch · ∏_{l>i} (fanout_l + 1)`` (each dst contributes itself — the dst
+prefix — plus at most ``fanout`` sampled sources), its source count one more
+fanout factor, and its nnz at most ``dst_cap · fanout_i``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.batching import tier_ladder
+
+
+def block_caps(
+    batch_size: int,
+    fanouts: Sequence[int],
+    *,
+    n_nodes: int | None = None,
+) -> list[tuple[int, int]]:
+    """Per-layer worst-case ``(m_cap, nnz_cap)``, input-side first (matching
+    ``neighbor_sample``'s block order). ``n_nodes`` optionally clamps the
+    node caps — a small graph can't produce more sources than it has nodes.
+    """
+    fanouts = list(fanouts)
+    caps = []
+    dst_cap = batch_size
+    for fanout in reversed(fanouts):      # seed-side inward
+        src_cap = dst_cap * (fanout + 1)  # dst prefix + sampled sources
+        if n_nodes is not None:
+            dst_cap = min(dst_cap, n_nodes)
+            src_cap = min(src_cap, n_nodes)
+        caps.append((src_cap, dst_cap * fanout))
+        dst_cap = src_cap
+    return list(reversed(caps))
+
+
+def block_ladders(
+    batch_size: int,
+    fanouts: Sequence[int],
+    *,
+    n_nodes: int | None = None,
+    levels: int = 3,
+) -> list[tuple[tuple[int, int], ...]]:
+    """One ``tier_ladder`` per layer (input-side first): the static rung sets
+    the loader pads every sampled block into. Total compile count per layer
+    is at most ``levels`` regardless of epoch length."""
+    return [
+        tier_ladder(m_max=m_cap, nnz_max=nnz_cap, levels=levels)
+        for m_cap, nnz_cap in block_caps(batch_size, fanouts,
+                                         n_nodes=n_nodes)
+    ]
+
+
+def bucket_for(
+    ladder: Sequence[tuple[int, int]],
+    n_src: int,
+    nnz: int,
+) -> tuple[int, int]:
+    """Smallest rung covering ``(n_src, nnz)`` on BOTH axes. The top rung
+    covers every admissible block by construction; exceeding it is a caller
+    bug (the caps were computed from different sampling parameters)."""
+    for m_pad, nnz_pad in ladder:         # ladder is sorted ascending
+        if n_src <= m_pad and nnz <= nnz_pad:
+            return (m_pad, nnz_pad)
+    raise ValueError(
+        f"block (n_src={n_src}, nnz={nnz}) exceeds the top ladder rung "
+        f"{tuple(ladder[-1])} — ladder built for different sampling params?")

@@ -1,0 +1,128 @@
+"""Fanout-bounded neighbor sampling over a :class:`~repro.core.csc.CSCGraph`
+(DESIGN.md §14).
+
+Modeled on DGL graphbolt's ``csc_sampling_graph`` / ``minibatch_sampler``
+split: the static CSC structure owns the graph, this module owns the
+per-minibatch randomness. ``neighbor_sample`` walks the layer stack from the
+seed (output) side inward: for each layer it samples at most ``fanout``
+in-neighbors per current destination node, compacts the touched node ids
+into local 0-based ids with the destinations as the PREFIX of the source
+set (the ``include_dst_in_src`` invariant ``core.csc.Block`` documents), and
+emits the bipartite adjacency as a kernel-ready padded ``BatchedCOO``.
+
+Determinism: the entire multi-layer sample is a pure function of
+``(csc, seeds, fanouts, seed)`` — same seed, same blocks, bitwise. A
+checkpoint-resumed trainer re-derives any minibatch's blocks from its
+``(loader seed, epoch, batch index)`` coordinates alone.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.csc import Block, CSCGraph, make_block
+
+
+def _compact(seeds: np.ndarray, flat_src: np.ndarray):
+    """Local-id compaction with the dst set as prefix: returns
+    ``(src_ids, cols_local)`` where ``src_ids[:len(seeds)] == seeds`` and
+    every entry of ``flat_src`` maps to its position in ``src_ids``
+    (first-appearance order — deterministic, no hash-order dependence)."""
+    cat = np.concatenate([seeds, flat_src]) if len(flat_src) else seeds
+    _, first = np.unique(cat, return_index=True)
+    src_ids = cat[np.sort(first)]          # unique, in first-appearance order
+    sorter = np.argsort(src_ids)
+    if len(flat_src):
+        cols = sorter[np.searchsorted(src_ids, flat_src, sorter=sorter)]
+    else:
+        cols = np.zeros((0,), np.int64)
+    return src_ids.astype(np.int64), cols.astype(np.int32)
+
+
+def sample_layer(
+    csc: CSCGraph,
+    seeds: np.ndarray,
+    fanout: int,
+    rng: np.random.Generator,
+):
+    """One layer's raw sample: for each seed (destination), up to ``fanout``
+    of its in-neighbors, without replacement (all of them when the true
+    in-degree is below the fanout — never padded back up).
+
+    Returns ``(rows, cols, src_ids)``: LOCAL dst row ids, LOCAL src col ids,
+    and the dst-prefixed global id map.
+    """
+    if fanout < 1:
+        raise ValueError(f"fanout must be >= 1, got {fanout}")
+    picked = []
+    indptr, indices = csc.indptr, csc.indices
+    for g in seeds:
+        lo, hi = int(indptr[g]), int(indptr[g + 1])
+        deg = hi - lo
+        if deg <= fanout:
+            picked.append(indices[lo:hi])
+        else:
+            picked.append(indices[lo + rng.choice(deg, size=fanout,
+                                                  replace=False)])
+    counts = np.fromiter((len(p) for p in picked), np.int64,
+                         count=len(picked))
+    rows = np.repeat(np.arange(len(seeds), dtype=np.int32), counts)
+    flat_src = (np.concatenate(picked) if len(picked) and counts.sum()
+                else np.zeros((0,), np.int64))
+    src_ids, cols = _compact(np.asarray(seeds, np.int64),
+                             flat_src.astype(np.int64))
+    return rows, cols, src_ids
+
+
+def neighbor_sample(
+    csc: CSCGraph,
+    seeds: np.ndarray,
+    fanouts: Sequence[int],
+    *,
+    seed: int | tuple = 0,
+    normalize: str = "mean",
+    shapes: Sequence[tuple[int, int] | None] | None = None,
+) -> list[Block]:
+    """Sample one minibatch's layered blocks (graphbolt's minibatch shape).
+
+    ``fanouts[i]`` bounds layer ``i``'s per-destination sample — layer 0 is
+    the INPUT-side layer (applied first in the forward pass), layer ``L-1``
+    the seed-side layer, matching the returned block order: ``blocks[-1]``
+    has ``dst == seeds`` and ``blocks[i].dst_ids() == blocks[i+1].src_ids``
+    (the chaining invariant the block forward pass slices on). Sampling
+    itself walks seed-side inward, so each layer's destinations are the
+    previous (outer) layer's source set.
+
+    ``shapes`` optionally pins each block's padded ``(m_pad, nnz_pad)`` to a
+    bucket rung (``repro.sampling.bucketing``) so every layer compiles a
+    bounded set of programs; ``None`` entries pad minimally.
+
+    ``seed`` may be an int or an int tuple (e.g. ``(loader_seed, epoch,
+    batch_index)``) — anything ``np.random.default_rng`` accepts as a seed
+    sequence — making every minibatch's randomness addressable.
+    """
+    seeds = np.asarray(seeds, np.int64)
+    if len(seeds) == 0:
+        raise ValueError("neighbor_sample needs at least one seed node")
+    if len(np.unique(seeds)) != len(seeds):
+        raise ValueError("seed nodes must be unique (they become the "
+                         "compacted dst prefix)")
+    if shapes is not None and len(shapes) != len(fanouts):
+        raise ValueError(f"shapes has {len(shapes)} entries for "
+                         f"{len(fanouts)} layers")
+    rng = np.random.default_rng(seed)
+    raw = []                                # seed-side first
+    cur = seeds
+    for fanout in reversed(list(fanouts)):
+        rows, cols, src_ids = sample_layer(csc, cur, fanout, rng)
+        raw.append((rows, cols, src_ids, len(cur)))
+        cur = src_ids
+    blocks = []
+    for i, (rows, cols, src_ids, n_dst) in enumerate(reversed(raw)):
+        shape = shapes[i] if shapes is not None else None
+        m_pad, nnz_pad = shape if shape is not None else (None, None)
+        blocks.append(make_block(rows, cols, src_ids, n_dst,
+                                 m_pad=m_pad, nnz_pad=nnz_pad,
+                                 normalize=normalize))
+    return blocks

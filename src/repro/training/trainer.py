@@ -20,6 +20,7 @@ LM ``Trainer`` responsibilities:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import signal
@@ -31,7 +32,7 @@ import jax
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.formats import BatchedCOO, validate_ell_k_pad
-from repro.core.gcn import GCNConfig, gcn_loss, init_gcn
+from repro.core.gcn import GCNConfig, gcn_loss, gcn_node_loss, init_gcn
 from repro.distributed.compression import ef_init
 from repro.distributed.steps import build_train_step
 from repro.models import lm
@@ -189,6 +190,164 @@ class GCNTrainer:
             return params, state, loss, acc, gnorm
 
         self._step = step
+
+        @functools.partial(jax.jit, static_argnames=("m_pads", "impls"))
+        def sampled_step(params, state, adj_arrays, x, labels, *, m_pads,
+                         impls):
+            adjs = [BatchedCOO(*a) for a in adj_arrays]
+            (loss, acc), grads = jax.value_and_grad(
+                lambda p: gcn_node_loss(p, self.cfg, adjs, x, labels,
+                                        m_pads=m_pads, impls=impls),
+                has_aux=True)(params)
+            gnorm = jax.numpy.sqrt(sum(
+                jax.numpy.vdot(g, g).real
+                for g in jax.tree.leaves(grads)))
+            params, state = adam_update(self.opt, params, grads, state)
+            return params, state, loss, acc, gnorm
+
+        self._sampled_step = sampled_step
+        self._block_impl_memo: dict[tuple, tuple] = {}
+
+    def block_decisions(self, batch) -> tuple:
+        """Per-layer autotune decisions for one sampled minibatch
+        (``repro.autotune.Decision`` each) — the block-aware workload:
+        ``block`` = the layer's padded dst-row count, ``max_deg`` = the
+        sampled in-degree skew rounded up to a power of two (so the memo and
+        tuning-cache keys stay bounded), ``k_pad=None`` (no global ELL bound
+        exists for a sampled block). Memoized per (geometry, skew) key; the
+        jitted step receives the resolved impl names as static args."""
+        from repro import autotune
+        from repro.kernels import resolve_interpret
+
+        blocks = batch.blocks
+        m_pads = tuple(b.m_pad for b in blocks)
+        n_seed = len(batch.labels)
+        # static per-layer dst-row bound: the next block's padded src count
+        # (dst rows ARE its src prefix); the last layer's is the seed count
+        dst_pads = tuple(
+            min(m_pads[i], m_pads[i + 1]) if i + 1 < len(blocks)
+            else min(m_pads[i], -(-n_seed // 8) * 8)
+            for i in range(len(blocks)))
+        max_degs = tuple(
+            1 << max(b.max_deg, 1).bit_length() for b in blocks)
+        key = (m_pads, tuple(b.nnz_pad for b in blocks), dst_pads, max_degs)
+        if key not in self._block_impl_memo:
+            interpret = resolve_interpret(self.cfg.interpret)
+            decisions = []
+            for i, b in enumerate(blocks):
+                w = autotune.Workload(
+                    batch=1, m_pad=b.m_pad, nnz_pad=b.nnz_pad, k_pad=None,
+                    n_b=self.cfg.conv_widths[i],
+                    itemsize=batch.x.dtype.itemsize,
+                    max_deg=max_degs[i], block=dst_pads[i])
+                if self.cfg.impl != "auto":
+                    decisions.append(autotune.forced_decision(
+                        w, self.cfg.impl))
+                else:
+                    decisions.append(autotune.select_impl(
+                        w, allow_pallas=not interpret,
+                        cache=autotune.default_cache()))
+            self._block_impl_memo[key] = tuple(decisions)
+        return self._block_impl_memo[key]
+
+    def fit_sampled(self, loader, *, epochs: int = 1, prefetch: bool = True,
+                    on_metrics: Callable[[int, dict], None] | None = None):
+        """Giant-graph training over a sampled-minibatch stream
+        (DESIGN.md §14): same step/checkpoint/telemetry machinery as ``fit``
+        on ``repro.sampling.SampledNodeLoader`` batches.
+
+        Per minibatch: the per-layer block decisions resolve host-side
+        (:meth:`block_decisions` — block-aware ``Workload``, memoized per
+        geometry) and the jitted node-classification step runs with the
+        blocks' ``(m_pads, impls)`` as static args, so the compile count is
+        bounded by the loader's bucket ladder, not the epoch length. The
+        distinct program count is exported as the ``train_sampled_programs``
+        gauge next to the usual loss/accuracy/step-time series.
+
+        Resume follows ``fit``'s contract: restore-latest, then fast-forward
+        ``start`` batches — the loader's ``(seed, epoch, batch)``-addressable
+        sampling makes the replayed stream bitwise identical. ``prefetch``
+        wraps each epoch in the one-deep double buffer so the next
+        minibatch's sample+gather overlaps the current step."""
+        if self.mesh is not None:
+            raise ValueError("fit_sampled is single-host for now: sampled "
+                             "blocks have batch=1, so there is no batch "
+                             "axis to shard over a mesh")
+        from repro.observability import TRACER
+
+        params, state, start = self.restore_or_init()
+        loss = acc = gnorm = float("nan")
+        labels_kw = {"layer": self.cfg.layer, "impl": self.cfg.impl}
+        log_every = max(self.tcfg.log_every, 1)
+        win_t0, win_nodes = time.perf_counter(), 0
+        m_programs = self.registry.gauge(
+            "train_sampled_programs",
+            "distinct compiled sampled-step programs (bucket-bounded)")
+        programs: set[tuple] = set()
+        step = seen = 0
+        for epoch in range(epochs):
+            batches = loader.epoch(epoch)
+            if prefetch:
+                from repro.sampling import Prefetcher
+
+                batches = Prefetcher(batches, registry=self.registry)
+            for b in batches:
+                seen += 1
+                if seen <= start:
+                    continue    # already trained before the restart
+                decisions = self.block_decisions(b)
+                impls = tuple(d.impl for d in decisions)
+                m_pads = tuple(bl.m_pad for bl in b.blocks)
+                adj_arrays = [(bl.adj.row_ids, bl.adj.col_ids,
+                               bl.adj.values, bl.adj.nnz, bl.adj.n_rows)
+                              for bl in b.blocks]
+                programs.add((m_pads,
+                              tuple(bl.nnz_pad for bl in b.blocks), impls))
+                if self.telemetry:
+                    with TRACER.span("train/sampled_step", cat="train",
+                                     args={"step": seen, **labels_kw}):
+                        t0 = time.perf_counter()
+                        params, state, loss, acc, gnorm = self._sampled_step(
+                            params, state, adj_arrays, b.x, b.labels,
+                            m_pads=m_pads, impls=impls)
+                        self._m_step_s.observe(
+                            time.perf_counter() - t0, **labels_kw)
+                    self._m_steps.inc(**labels_kw)
+                    m_programs.set(len(programs), **labels_kw)
+                    win_nodes += len(b.labels)
+                    if seen % log_every == 0:
+                        # the ONLY per-window device sync (same posture
+                        # as fit)
+                        self._m_loss.set(float(loss), **labels_kw)
+                        self._m_acc.set(float(acc), **labels_kw)
+                        self._m_gnorm.set(float(gnorm), **labels_kw)
+                        now = time.perf_counter()
+                        if now > win_t0:
+                            self._m_tput.set(win_nodes / (now - win_t0),
+                                             **labels_kw)
+                        win_t0, win_nodes = now, 0
+                else:
+                    params, state, loss, acc, gnorm = self._sampled_step(
+                        params, state, adj_arrays, b.x, b.labels,
+                        m_pads=m_pads, impls=impls)
+                step = seen
+                if step % max(self.tcfg.checkpoint_every, 1) == 0:
+                    self.manager.save(step, (params, state))
+            if step > start:
+                rec = {"epoch": epoch + 1, "loss": float(loss),
+                       "acc": float(acc), "grad_norm": float(gnorm),
+                       "programs": len(programs), "time": time.time()}
+                if self.telemetry:
+                    self._m_loss.set(float(loss), **labels_kw)
+                    self._m_acc.set(float(acc), **labels_kw)
+                    self._m_gnorm.set(float(gnorm), **labels_kw)
+                if on_metrics:
+                    on_metrics(epoch + 1, rec)
+        if step > start:
+            self.manager.save(step, (params, state))
+        return params, state, {"loss": float(loss), "acc": float(acc),
+                               "grad_norm": float(gnorm),
+                               "programs": len(programs)}
 
     def layer_decision(self, batch: dict):
         """The adaptive layer decision (``repro.autotune.Decision``) for one

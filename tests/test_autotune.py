@@ -203,6 +203,33 @@ def test_cache_roundtrip(tmp_path):
     assert reloaded.times(w.key())["dense"] == pytest.approx(3e-4)
 
 
+def test_cache_merge_on_save_unions_writers(tmp_path):
+    """Regression (ISSUE 10): two caches sharing one path used to be
+    last-write-wins — the second save silently dropped the first writer's
+    records. save() now re-reads the file and unions: disk-only keys
+    survive, shared keys merge their times at per-impl min with ``best``
+    recomputed."""
+    path = str(tmp_path / "tune.json")
+    a = TuningCache(path)
+    b = TuningCache(path)       # opened before a writes anything
+    a.put("k_a", {"ref": 2e-4, "ell": 3e-4}, interpret=True)
+    b.put("k_b", {"dense": 1e-4}, interpret=True)   # pre-fix: clobbered k_a
+    merged = TuningCache(path)
+    assert set(merged.records) == {"k_a", "k_b"}
+    assert merged.best("k_a") == "ref" and merged.best("k_b") == "dense"
+    # shared key: per-impl min, best recomputed from the merged map
+    c = TuningCache(path)
+    c.records.pop("k_b")        # this writer never measured k_b
+    c.put("k_a", {"ref": 5e-4, "dense": 0.5e-4}, interpret=True)
+    final = TuningCache(path)
+    assert set(final.records) == {"k_a", "k_b"}     # k_b still survives
+    assert final.times("k_a") == pytest.approx(
+        {"ref": 2e-4, "ell": 3e-4, "dense": 0.5e-4})
+    assert final.best("k_a") == "dense"
+    # the merged view is also what the saving process sees afterwards
+    assert c.best("k_a") == "dense"
+
+
 def test_cache_overrides_model_selection(tmp_path):
     cache = TuningCache(str(tmp_path / "tune.json"))
     w = SMALL_DENSE
